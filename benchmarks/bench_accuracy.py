@@ -1,0 +1,106 @@
+"""Paper Table 5 — absolute accuracy with / without operation approximation
+and with / without accuracy recovery.
+
+Trains the smoke CapsNet on the synthetic class-conditional dataset, then
+evaluates the SAME weights under three routing modes:
+  exact                    (paper 'Origin')
+  approx w/o recovery      (paper 'w/o Accuracy Recovery')
+  approx w/  recovery      (paper 'w/ Accuracy Recovery')
+The paper reports 0.35% mean loss w/o recovery, 0.04% with.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.caps_benchmarks import CapsConfig
+from repro.core import approx, routing
+from repro.data.synthetic import SyntheticCapsDataset
+from repro.models import capsnet
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+TRAIN_STEPS = 120
+EVAL_BATCHES = 8
+EVAL_BS = 64
+
+
+def bench_caps() -> CapsConfig:
+    """EMNIST-Letter-like difficulty (26 classes, Caps-EN1 geometry scaled)
+    and deliberately under-trained, so accuracy sits off the ceiling and
+    the approximation delta is visible (the smoke config saturates at 100%
+    and every mode trivially ties)."""
+    return CapsConfig("Caps-bench26", "synthetic", 16, 288, 26, 3,
+                      caps_channels=8, image_hw=28, conv_channels=64)
+
+
+def train(cfg, key):
+    params = capsnet.init_capsnet(key, cfg)
+    opt = adamw_init(params)
+    ocfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
+    ds = SyntheticCapsDataset(cfg.image_hw, cfg.image_channels,
+                              cfg.num_h_caps)
+
+    @jax.jit
+    def step(params, opt, images, labels):
+        (loss, m), grads = jax.value_and_grad(
+            capsnet.loss_fn, has_aux=True)(params, images, labels, cfg)
+        params, opt = adamw_update(grads, opt, params, ocfg)
+        return params, opt, loss
+
+    for i in range(TRAIN_STEPS):
+        b = ds.batch(i, cfg.batch_size)
+        params, opt, _ = step(params, opt, jnp.asarray(b["images"]),
+                              jnp.asarray(b["labels"]))
+    return params, ds
+
+
+def evaluate(params, ds, cfg, rc):
+    fwd = jax.jit(functools.partial(capsnet.forward, cfg=cfg,
+                                    routing_cfg=rc))
+    hits = n = 0
+    for i in range(1000, 1000 + EVAL_BATCHES):
+        b = ds.batch(i, EVAL_BS)
+        out = fwd(params, jnp.asarray(b["images"]))
+        pred = jnp.argmax(out["class_probs"], -1)
+        hits += int((pred == jnp.asarray(b["labels"])).sum())
+        n += EVAL_BS
+    return hits / n
+
+
+class _NoRecovery:
+    """Temporarily zero the recovery multipliers (paper 'w/o recovery')."""
+
+    def __enter__(self):
+        self.saved = (approx.EXP_RECOVERY, approx.INV_SQRT_RECOVERY,
+                      approx.RECIP_RECOVERY)
+        approx.EXP_RECOVERY = approx.INV_SQRT_RECOVERY = \
+            approx.RECIP_RECOVERY = 1.0
+        jax.clear_caches()
+
+    def __exit__(self, *a):
+        (approx.EXP_RECOVERY, approx.INV_SQRT_RECOVERY,
+         approx.RECIP_RECOVERY) = self.saved
+        jax.clear_caches()
+
+
+def main():
+    cfg = bench_caps()
+    params, ds = train(cfg, jax.random.PRNGKey(0))
+    it = cfg.routing_iters
+    acc_exact = evaluate(params, ds, cfg, routing.RoutingConfig(it))
+    with _NoRecovery():
+        acc_norec = evaluate(params, ds, cfg,
+                             routing.RoutingConfig(it, use_approx=True))
+    acc_rec = evaluate(params, ds, cfg,
+                       routing.RoutingConfig(it, use_approx=True))
+    print("mode,accuracy,delta_vs_exact")
+    print(f"exact,{acc_exact:.4f},0.0000")
+    print(f"approx_no_recovery,{acc_norec:.4f},{acc_exact - acc_norec:.4f}")
+    print(f"approx_with_recovery,{acc_rec:.4f},{acc_exact - acc_rec:.4f}")
+    print("# paper Table 5: mean delta 0.0035 w/o recovery, 0.0004 with")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Fig.18 — dimension-selection sensitivity to PE frequency.
+
+Evaluates the execution score S = 1/(αE + βM) for B/L/H distribution of
+each Table-1 benchmark at the paper's three PE frequencies (312.5, 625,
+937.5 MHz) and prints the per-cell speedup of each dimension over the
+worst choice — the heat-map data of Fig.18, including the dimension-flip
+behaviour the paper highlights for Caps-SV3.
+"""
+from __future__ import annotations
+
+from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
+from repro.core import distribution as D
+
+FREQS_MHZ = (312.5, 625.0, 937.5)
+
+
+def run():
+    rows = []
+    for f in FREQS_MHZ:
+        dev = D.DeviceModel.hmc(freq_hz=f * 1e6)
+        for name, cfg in CAPS_BENCHMARKS.items():
+            s = D.RPShape.from_caps_config(cfg)
+            times = {d: D.estimated_time_s(d, s, dev) for d in D.DIMS}
+            worst = max(times.values())
+            speedups = {d: worst / t for d, t in times.items()}
+            best = max(speedups, key=speedups.__getitem__)
+            rows.append((f, name, speedups, best))
+    return rows
+
+
+def main():
+    print("freq_mhz,network,speedup_B,speedup_L,speedup_H,best_dim")
+    best_by_net = {}
+    for f, name, sp, best in run():
+        print(f"{f},{name},{sp['B']:.2f},{sp['L']:.2f},{sp['H']:.2f},{best}")
+        best_by_net.setdefault(name, []).append(best)
+    flips = {n: v for n, v in best_by_net.items() if len(set(v)) > 1}
+    print(f"# dimension choice flips with frequency for: "
+          f"{sorted(flips) or 'none'} (paper Fig.18: choice is "
+          f"config- and frequency-dependent)")
+
+
+if __name__ == "__main__":
+    main()

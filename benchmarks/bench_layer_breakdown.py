@@ -1,0 +1,64 @@
+"""Paper Fig.4 — per-layer execution-time breakdown of CapsNet inference.
+
+Reproduces the paper's observation that the routing procedure dominates
+inference (74.62% average on their GPUs) by timing Conv/PrimaryCaps, the RP,
+and the FC decoder separately on each Table-1 benchmark geometry (scaled
+batch for the CPU container; the *fractions* are the claim, not the
+absolute times).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
+from repro.core import capsule_layers as CL
+from repro.core import routing
+from repro.models import capsnet
+
+# CPU scaling: run each config at reduced batch (the fraction is
+# batch-independent; paper Fig.4 shows it grows mildly with batch).
+BENCH_BATCH = 4
+
+
+def run(configs=None, batch: int = BENCH_BATCH):
+    rows = []
+    names = configs or list(CAPS_BENCHMARKS)
+    for name in names:
+        cfg = CAPS_BENCHMARKS[name]
+        key = jax.random.PRNGKey(0)
+        params = capsnet.init_capsnet(key, cfg)
+        images = jax.random.uniform(
+            key, (batch, cfg.image_hw, cfg.image_hw, cfg.image_channels))
+        rc = routing.RoutingConfig(iterations=cfg.routing_iters)
+
+        conv_fn = jax.jit(lambda im: capsnet.primary_caps(params, im, cfg))
+        u = conv_fn(images)
+        votes_fn = jax.jit(lambda u: CL.predict_votes(params["digit"], u))
+        u_hat = votes_fn(u)
+        rp_fn = jax.jit(lambda uh: routing.dynamic_routing(uh, rc))
+        v = rp_fn(u_hat)
+        fc_fn = jax.jit(lambda v: CL.decoder_forward(params["decoder"], v))
+
+        t_conv = time_call(conv_fn, images) + time_call(votes_fn, u)
+        t_rp = time_call(rp_fn, u_hat)
+        t_fc = time_call(fc_fn, v)
+        total = t_conv + t_rp + t_fc
+        rows.append((name, t_conv, t_rp, t_fc, t_rp / total))
+    return rows
+
+
+def main():
+    rows = run()
+    print("network,conv_s,rp_s,fc_s,rp_fraction")
+    fr = []
+    for name, c, r, f, frac in rows:
+        print(f"{name},{c:.4f},{r:.4f},{f:.4f},{frac:.3f}")
+        fr.append(frac)
+    print(f"# mean RP fraction: {sum(fr)/len(fr):.3f} "
+          f"(paper Fig.4: 0.746 on Tesla P100)")
+
+
+if __name__ == "__main__":
+    main()

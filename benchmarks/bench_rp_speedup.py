@@ -1,0 +1,126 @@
+"""Paper Fig.15/16 — RP acceleration: naive baseline vs fused-kernel vs
+distribution-planned execution.
+
+Two complementary measurements:
+
+(1) MEASURED (this container, CPU): the naive RP (materialise every
+    intermediate — the paper's GPU-pathology baseline, ref.py) vs the fused
+    single-pass schedule (kernels/routing via interpret mode is pure-python
+    — we time its jnp mirror, the lazy-update schedule with no re-reads) —
+    the memory-traffic ratio the kernel eliminates.
+
+(2) MODELED (paper Table-4 operating points): the analytical execution-time
+    model S⁻¹ = αE + βM (core.distribution) evaluated with the paper's HMC
+    coefficients vs a GPU-baseline model (same FLOP count over P100
+    FLOP/s + HBM traffic over 732GB/s), per Table-1 benchmark — the
+    reproduction of the paper's 2.17x-average RP claim shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
+from repro.core import distribution as D
+from repro.core import routing
+from repro.kernels.routing import ref as rt_ref
+
+# P100 operating point for the modeled GPU baseline (paper Table 4)
+P100_FLOPS = 9.5e12          # FP32
+P100_HBM = 732e9             # bytes/s
+# RP traffic factor: the characterisation (paper §3.2) finds the RP
+# re-reads/writes its intermediates from off-chip memory each equation;
+# naive traffic ~ 4 tensors x u_hat bytes per iteration (u_hat, c·u_hat
+# products, agreement, b updates).
+NAIVE_TRAFFIC_FACTOR = 4.0
+FUSED_TRAFFIC_FACTOR = 1.0   # stream u_hat once (kernel design)
+
+
+def measured_speedups(batch: int = 2):
+    """CPU-measured naive vs fused-schedule RP step times."""
+    rows = []
+    for name in ("Caps-MN1", "Caps-EN3", "Caps-SV1"):
+        cfg = CAPS_BENCHMARKS[name]
+        key = jax.random.PRNGKey(0)
+        u_hat = jax.random.normal(
+            key, (batch, cfg.num_l_caps, cfg.num_h_caps, cfg.h_caps_dim))
+
+        def naive(uh):
+            # eager Algorithm-1: two u_hat sweeps/iter + explicit products
+            b = jnp.zeros((cfg.num_l_caps, cfg.num_h_caps))
+            v = None
+            for _ in range(cfg.routing_iters):
+                c = jax.nn.softmax(b, -1)
+                weighted = uh * c[None, :, :, None]       # materialised
+                s = weighted.sum(1)
+                n2 = (s ** 2).sum(-1, keepdims=True)
+                v = s * (n2 / (1 + n2)) / jnp.sqrt(n2 + 1e-9)
+                agree = (uh * v[:, None]).sum(-1)         # materialised
+                b = b + agree.sum(0)
+            return v
+
+        def fused(uh):
+            return rt_ref.dynamic_routing_ref(uh, cfg.routing_iters)
+
+        t_n = time_call(jax.jit(naive), u_hat)
+        t_f = time_call(jax.jit(fused), u_hat)
+        rows.append((name, t_n, t_f, t_n / t_f))
+    return rows
+
+
+HMC_INTERNAL_BW = 512e9      # paper Table 4: aggregate vault bandwidth
+HMC_XBAR_BW = 512e9          # crossbar for inter-vault traffic
+
+
+def modeled_speedups():
+    """Analytical PIM-vs-GPU RP model per Table-1 config (paper Fig.15a).
+
+    Both sides are bandwidth-roofline models — the paper's own mechanism:
+    the GPU re-streams the unshareable intermediates from off-chip memory
+    ~4x per iteration (§3.2 characterisation; LDST 85.9% vs ALU 38.6%
+    utilised), while the in-memory PEs stream û once per iteration at the
+    vaults' aggregate internal bandwidth, plus the planner-chosen
+    dimension's inter-vault traffic M over the crossbar.  (A pure
+    op-throughput model with Table-4's literal 512 PEs x 312.5 MHz makes
+    HMC compute-bound and *slower* — the PEs must stream, not ALU-bind;
+    noted in EXPERIMENTS.md §Paper-claims.)
+    """
+    rows = []
+    hmc = D.DeviceModel.hmc()
+    for name, cfg in CAPS_BENCHMARKS.items():
+        s = D.RPShape.from_caps_config(cfg)
+        dim = D.plan(s, hmc)
+        u_hat_bytes = 4.0 * s.n_b * s.n_l * s.n_h * s.c_h
+        total_ops = D.workload_E("B", s, 1)  # n_vault=1 -> total RP ops
+        t_gpu = max(total_ops / P100_FLOPS,
+                    NAIVE_TRAFFIC_FACTOR * s.iters * u_hat_bytes / P100_HBM)
+        t_pim = max(FUSED_TRAFFIC_FACTOR * s.iters * u_hat_bytes
+                    / HMC_INTERNAL_BW,
+                    D.comm_M(dim, s, hmc.n_vault) / HMC_XBAR_BW)
+        rows.append((name, dim, t_gpu, t_pim, t_gpu / t_pim))
+    return rows
+
+
+def main():
+    print("== measured (CPU): naive vs fused RP schedule ==")
+    print("network,naive_s,fused_s,speedup")
+    for name, tn, tf, sp in measured_speedups():
+        print(f"{name},{tn:.4f},{tf:.4f},{sp:.2f}")
+    print("# (CPU wall-time is a weak proxy — XLA CPU fuses the naive "
+          "form too; the traffic claim is the kernel DMA model, "
+          "kernels/routing/ops.py::dma_bytes_per_call)")
+    print()
+    print("== modeled (paper Table-4 coefficients): GPU vs PIM RP ==")
+    print("network,chosen_dim,gpu_model_s,pim_model_s,speedup")
+    sps = []
+    for name, dim, tg, tp, sp in modeled_speedups():
+        print(f"{name},{dim},{tg:.5f},{tp:.5f},{sp:.2f}")
+        sps.append(sp)
+    print(f"# geomean modeled RP speedup: "
+          f"{(jnp.prod(jnp.array(sps)) ** (1 / len(sps))):.2f} "
+          f"(paper Fig.15: 2.17x avg)")
+
+
+if __name__ == "__main__":
+    main()

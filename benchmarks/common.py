@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: wall-clock timing on the host CPU (relative
+comparisons only) + the paper's analytical HMC/GPU models for the absolute
+Fig.15/17 numbers the container cannot measure."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,123 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+results/dryrun/*.json (and the routing cell from results/routing_dryrun).
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+import repro.configs as C
+from benchmarks.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                 model_flops_per_device)
+
+GIB = 2 ** 30
+
+
+def fmt_s(x: float) -> str:
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2g}m"
+    return f"{x * 1e6:.2g}µ"
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def dryrun_table(recs):
+    lines = ["| arch | shape | mesh | status | compile_s | peak GiB/dev "
+             "(raw) | peak GiB/dev (TPU-corr.) | n_micro |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"SKIP ({r['reason'][:40]}...) | | | | |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']} | {m['peak_bytes_per_device'] / GIB:.2f} | "
+            f"{m.get('peak_tpu_corrected', m['peak_bytes_per_device']) / GIB:.2f} | "
+            f"{r.get('num_microbatches', '-')} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = ["| arch | shape | mesh | compute s | memory s [lo,hi] | "
+             "collective s (bf16eq) | dominant | MODEL/HLO flops | "
+             "roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        h = r["hlo"]
+        ct = h["flops"] / PEAK_FLOPS
+        lo, hi = h.get("hbm_bytes_lower", h["hbm_bytes"]), h["hbm_bytes"]
+        mt = math.sqrt(max(lo, 1.0) * hi) / HBM_BW
+        kt = h.get("collective_bytes_bf16eq", h["collective_bytes"]) / ICI_BW
+        terms = {"compute": ct, "memory": mt, "collective": kt}
+        dom = max(terms, key=terms.__getitem__)
+        mf = model_flops_per_device(r)
+        ratio = mf / h["flops"] if mf and h["flops"] else None
+        frac = (mf / PEAK_FLOPS) / max(terms.values()) if mf else None
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(ct)} | "
+            f"{fmt_s(mt)} [{fmt_s(lo / HBM_BW)},{fmt_s(hi / HBM_BW)}] | "
+            f"{fmt_s(kt)} | {dom} | "
+            f"{ratio:.2f} | {frac:.3f} |" if mf else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {fmt_s(ct)} | "
+            f"{fmt_s(mt)} | {fmt_s(kt)} | {dom} | - | - |")
+    return "\n".join(lines)
+
+
+def routing_table(out_dir="results/routing_dryrun"):
+    lines = ["| config | cell | flops/dev | coll B/dev (measured) | "
+             "ring-model B | memory s | status |",
+             "|---|---|---|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        d = json.load(open(f))
+        for tag, c in d["cells"].items():
+            if c.get("status") != "ok":
+                lines.append(f"| {d['config']} | {tag} | | | | | "
+                             f"SKIP: {c.get('reason', '')[:50]} |")
+                continue
+            ring = c.get("ring_M_model")
+            ring = d["pod_scale"]["ring_M_model"].get(
+                tag.replace("pod_", ""), ring) if ring is None else ring
+            lines.append(
+                f"| {d['config']} | {tag} | {c['flops']:.3g} | "
+                f"{c['collective_bytes']:.3g} | "
+                f"{ring if ring is None else f'{ring:.3g}'} | "
+                f"{fmt_s(c['terms']['memory_s'])} | ok |")
+        lines.append(
+            f"| {d['config']} | *planner:* paper32={d['paper_scale']['planner_pick']}"
+            f" pod={d['pod_scale']['planner_pick']}"
+            f" measured-best={d['pod_scale'].get('best_measured')} | | | | | |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load()
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skip" for r in recs)
+    print(f"<!-- generated from results/dryrun: ok={n_ok} skip={n_skip} -->")
+    print("\n### Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n### Roofline table\n")
+    print(roofline_table(recs))
+    print("\n### Routing (paper cell) table\n")
+    print(routing_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""§Roofline — derive the three roofline terms per (arch x shape x mesh)
+from the dry-run records (results/dryrun/*.json).
+
+    compute    = HLO_FLOPs/device   / 197 TFLOP/s (bf16, v5e)
+    memory     = HLO_bytes/device   / 819 GB/s HBM
+    collective = coll_bytes/device  / 50 GB/s ICI per chip
+
+All three numerators come from the SPMD-partitioned HLO (per-device
+shapes), so dividing by per-chip rates gives per-step seconds directly —
+algebraically identical to the task's global-numerator / (chips x rate)
+form.  MODEL_FLOPS uses 6·N_active·D for training and 2·N_active·D for
+inference (dense-matmul convention; attention FLOPs excluded), so
+MODEL/HLO < 1 quantifies remat recompute + attention + overhead.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+import repro.configs as C
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+BOTTLENECK_FIX = {
+    "compute": "reduce recompute (remat policy) / raise arithmetic "
+               "intensity per chip",
+    "memory": "fuse the producer-consumer chain so intermediates stay "
+              "on-chip (stream-once schedule)",
+    "collective": "reshard to cut TP all-reduce volume (sequence-sharded "
+                  "activations, bf16 collectives) or overlap with compute",
+}
+
+
+def model_flops_per_device(rec: dict) -> Optional[float]:
+    try:
+        cfg = C.get_config(rec["arch"])
+    except KeyError:
+        return None
+    n_active = cfg.active_param_count()
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 6.0 * n_active * tokens
+    elif rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * rec["global_batch"]
+    return total / rec["n_devices"]
+
+
+def load_records(out_dir: str = "results/dryrun") -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def terms(rec: dict) -> Dict[str, float]:
+    """memory uses the geomean of the fusion-boundary upper bound and the
+    perfect-fusion lower bound (hlo_analysis docstring); both bounds are
+    reported in EXPERIMENTS.md."""
+    h = rec["hlo"]
+    up = h["hbm_bytes"]
+    lo = h.get("hbm_bytes_lower", up)
+    mem = (up * lo) ** 0.5 if lo else up
+    coll = h.get("collective_bytes_bf16eq", h["collective_bytes"])
+    return {"compute": h["flops"] / PEAK_FLOPS,
+            "memory": mem / HBM_BW,
+            "collective": coll / ICI_BW}
+
+
+def memory_bounds(rec: dict) -> tuple:
+    h = rec["hlo"]
+    return (h.get("hbm_bytes_lower", h["hbm_bytes"]) / HBM_BW,
+            h["hbm_bytes"] / HBM_BW)
+
+
+def analyze(rec: dict) -> dict:
+    t = terms(rec)
+    dom = max(t, key=t.__getitem__)
+    mf = model_flops_per_device(rec)
+    bound = max(t.values())
+    # overlapped step model: HBM traffic and compute overlap on-chip only
+    # partially (serialize), but async collectives hide under compute —
+    # the exposed collective time is max(0, coll - compute) and the
+    # overlapped bound is compute+memory serialized + exposed collectives.
+    overlapped = t["compute"] + t["memory"] + max(
+        0.0, t["collective"] - t["compute"])
+    out = {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        **{f"{k}_s": v for k, v in t.items()},
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": (mf / rec["hlo"]["flops"]
+                         if mf and rec["hlo"]["flops"] else None),
+        # fraction of roofline: ideal time (compute term at 100% MFU of the
+        # useful FLOPs) over the bound set by the dominant term
+        "roofline_fraction": ((mf / PEAK_FLOPS) / bound
+                              if mf and bound else None),
+        "overlapped_step_s": overlapped,
+        "roofline_fraction_overlapped": ((mf / PEAK_FLOPS) / overlapped
+                                         if mf and overlapped else None),
+        "peak_gib": rec["memory"]["peak_bytes_per_device"] / 2 ** 30,
+        "peak_gib_tpu": rec["memory"].get(
+            "peak_tpu_corrected",
+            rec["memory"]["peak_bytes_per_device"]) / 2 ** 30,
+        "fix": BOTTLENECK_FIX[dom],
+    }
+    return out
+
+
+def main(out_dir: str = "results/dryrun"):
+    recs = [r for r in load_records(out_dir) if r.get("status") == "ok"]
+    print("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+          "useful_ratio,roofline_fraction,peak_gib_tpu")
+    rows = [analyze(r) for r in recs]
+    for a in rows:
+        ur = f"{a['useful_ratio']:.3f}" if a["useful_ratio"] else "-"
+        rf = f"{a['roofline_fraction']:.3f}" if a["roofline_fraction"] else "-"
+        print(f"{a['arch']},{a['shape']},{a['mesh']},{a['compute_s']:.4g},"
+              f"{a['memory_s']:.4g},{a['collective_s']:.4g},{a['dominant']},"
+              f"{ur},{rf},{a['peak_gib_tpu']:.2f}")
+    # headline picks over throughput cells (train/prefill — decode cells
+    # are latency-bound and their MODEL_FLOPS fraction is trivially ~0)
+    tp = [a for a in rows if a["roofline_fraction"]
+          and a["shape"] in ("train_4k", "prefill_32k")]
+    if tp:
+        w = min(tp, key=lambda a: a["roofline_fraction"])
+        print(f"# worst roofline fraction (train/prefill): {w['arch']}/"
+              f"{w['shape']}/{w['mesh']} = {w['roofline_fraction']:.3f} "
+              f"({w['dominant']}-bound)")
+        c = max(tp, key=lambda a: a["collective_s"])
+        print(f"# largest collective term: {c['arch']}/{c['shape']}/"
+              f"{c['mesh']} = {c['collective_s']:.1f}s "
+              f"({c['collective_s'] / max(c['compute_s'], 1e-12):.1f}x "
+              f"compute)")
+
+
+if __name__ == "__main__":
+    main()

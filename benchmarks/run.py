@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    python -m benchmarks.run            # all benches
+    python -m benchmarks.run --only rp_speedup accuracy
+
+| bench            | paper artifact                                     |
+|------------------|----------------------------------------------------|
+| layer_breakdown  | Fig.4  — per-layer time, RP fraction               |
+| rp_speedup       | Fig.15/16 — naive vs fused vs PIM-modeled RP       |
+| distribution     | Fig.18 — dimension choice vs PE frequency          |
+| accuracy         | Table 5 — approximation ± recovery accuracy        |
+| scaling          | §6.2.1 — speedup vs network size                   |
+| pipeline         | Fig.8/§6.3 — host||PIM pipelined execution         |
+| roofline         | (this repro) §Roofline terms from the dry-run      |
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+BENCHES = ("layer_breakdown", "rp_speedup", "distribution", "accuracy",
+           "scaling", "pipeline", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help=f"subset of {BENCHES}")
+    args = ap.parse_args()
+    names = args.only or BENCHES
+    failed = []
+    for name in names:
+        mod_name = ("benchmarks.roofline" if name == "roofline"
+                    else f"benchmarks.bench_{name}")
+        print(f"\n===== {name} ({mod_name}) =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main()
+            print(f"# [{name}] done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

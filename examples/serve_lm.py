@@ -1,0 +1,75 @@
+"""Serving driver: batched prefill + greedy decode with KV/SSM caches for
+any assigned architecture (reduced config on CPU) — the inference-side
+end-to-end example (decode_32k / long_500k cells run this path at scale).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral-8x7b
+    PYTHONPATH=src python examples/serve_lm.py --arch falcon-mamba-7b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import lm
+from repro.runtime import serve_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b",
+                    choices=C.list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = C.get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    batch = {"tokens": prompts}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        max_len += cfg.n_img_tokens
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.source_len, cfg.d_model), jnp.float32)
+
+    t0 = time.perf_counter()
+    logits, state = jax.jit(
+        lambda p, b: lm.prefill(p, cfg, b, max_len=max_len))(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    decode = jax.jit(lambda p, s, t: lm.decode_step(p, cfg, s, t))
+    tok = jnp.argmax(logits, -1)[:, None]
+    generated = [tok]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits, -1)[:, None]
+        generated.append(tok)
+    jax.block_until_ready(generated[-1])
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    toks_per_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"{cfg.name}: prefill({args.batch}x{args.prompt_len}) "
+          f"{t_prefill * 1e3:.1f}ms; decode {args.gen - 1} steps "
+          f"{t_decode * 1e3:.1f}ms ({toks_per_s:.0f} tok/s on CPU)")
+    print("sample continuation (request 0):", out[0, :16].tolist())
+    # sanity: decode must be deterministic given the cache
+    logits2, _ = decode(params, state, tok)
+    logits3, _ = decode(params, state, tok)
+    assert bool(jnp.allclose(logits2, logits3)), "decode must be pure"
+    print("decode determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

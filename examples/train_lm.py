@@ -1,0 +1,95 @@
+"""End-to-end LM training driver: train a ~tens-of-M-param reduced config
+of any assigned architecture for a few hundred steps on the synthetic
+bigram LM dataset — CE must fall.  Exercises the full distributed-runtime
+substrate on CPU (grad accumulation, clipping, schedule, checkpoint
+resume).
+
+    PYTHONPATH=src python examples/train_lm.py --arch granite-3-2b --steps 100
+    PYTHONPATH=src python examples/train_lm.py --arch mixtral-8x7b --steps 60
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro import checkpoint as ck
+from repro.data.synthetic import SyntheticLMDataset
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import train_loop
+from repro.runtime.straggler import StepWatchdog
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b",
+                    choices=C.list_archs())
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = C.get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    opt = adamw_init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params / 1e6:.2f}M params "
+          f"(family={cfg.family})")
+
+    start = 0
+    if args.ckpt_dir:
+        s0 = ck.latest_step(args.ckpt_dir)
+        if s0 is not None:
+            params = ck.load_checkpoint(args.ckpt_dir, s0, params)
+            start = s0
+            print(f"resumed from step {start}")
+
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq)
+    step = train_loop.make_train_step(
+        cfg, opt_cfg=AdamWConfig(lr=3e-4, weight_decay=0.01),
+        num_microbatches=args.microbatches, total_steps=args.steps,
+        warmup=10)
+    step = jax.jit(step)
+    watchdog = StepWatchdog()
+
+    def to_micro(b):
+        n, bs = args.microbatches, args.batch
+        out = {}
+        for k, v in b.items():
+            v = jnp.asarray(v)
+            out[k] = v.reshape(n, bs // n, *v.shape[1:]) if n > 1 else v
+        if cfg.family == "vlm":
+            lead = (n, bs // n) if n > 1 else (bs,)
+            out["image_embeds"] = jnp.zeros(
+                (*lead, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+        if cfg.enc_dec:
+            lead = (n, bs // n) if n > 1 else (bs,)
+            out["frames"] = jnp.zeros(
+                (*lead, cfg.source_len, cfg.d_model), jnp.float32)
+        return out
+
+    first_loss = None
+    for i in range(start, args.steps):
+        batch = to_micro(ds.batch(i, args.batch))
+        watchdog.start(i)
+        params, opt, metrics = step(params, opt, batch)
+        watchdog.stop()
+        if first_loss is None:
+            first_loss = float(metrics["loss"])
+        if (i + 1) % 20 == 0:
+            print(f"step {i + 1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}")
+        if args.ckpt_dir and (i + 1) % 50 == 0:
+            ck.save_checkpoint(args.ckpt_dir, i + 1, params)
+
+    final = float(metrics["loss"])
+    print(f"loss: {first_loss:.4f} -> {final:.4f} "
+          f"({'fell' if final < first_loss else 'DID NOT FALL'})")
+
+
+if __name__ == "__main__":
+    main()

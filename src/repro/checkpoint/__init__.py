@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (AsyncCheckpointer, load_checkpoint,
+                                   save_checkpoint, latest_step)
+
+__all__ = ["AsyncCheckpointer", "load_checkpoint", "save_checkpoint",
+           "latest_step"]

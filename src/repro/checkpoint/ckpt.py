@@ -1,0 +1,148 @@
+"""Mesh-agnostic sharded checkpointing with async writes.
+
+Format: one directory per step containing
+    manifest.json      — pytree structure, leaf paths, shapes, dtypes
+    <leaf>.npy         — one file per leaf (full logical array)
+
+Design (DESIGN.md §5):
+  * leaves are saved as *logical* arrays, so a restart may build a mesh of a
+    different shape/size and simply ``jax.device_put`` each leaf with the new
+    sharding — elastic restart is a property of the format, not a special
+    path (``runtime.elastic`` wires it up);
+  * ``AsyncCheckpointer`` snapshots to host memory synchronously (cheap) and
+    writes files on a background thread so the training step is not blocked
+    — the paper-adjacent "overlap slow IO with compute" discipline;
+  * writes go to ``<dir>.tmp`` then ``os.replace`` → a crash mid-write never
+    corrupts the latest complete checkpoint (restart safety).
+
+On a real multi-host pod each host would write only the shards it owns
+(process-local addressable shards) with the same manifest; the single-
+process container collapses that to full arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    """Synchronous save.  Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    manifest = {}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        arr = np.asarray(leaf)
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape),
+                         "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, target_tree,
+                    shardings=None):
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional matching pytree of ``jax.sharding.Sharding`` —
+    leaves are device_put with them (reshard-on-restore; the mesh may differ
+    from the one that saved).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    flat_target = _flatten(target_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    out = {}
+    for key in flat_target:
+        if key not in manifest:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(path, manifest[key]["file"]))
+        tgt = flat_target[key]
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs target {tgt.shape}")
+        if key in flat_shard:
+            out[key] = jax.device_put(arr.astype(tgt.dtype), flat_shard[key])
+        else:
+            out[key] = jax.numpy.asarray(arr.astype(tgt.dtype))
+    # rebuild tree in target structure
+    treedef = jax.tree_util.tree_structure(target_tree)
+    ordered = [out[k] for k in _flatten_order(target_tree)]
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+def _flatten_order(tree) -> list[str]:
+    order = []
+    for path, _ in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        order.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                              for p in path))
+    return order
+
+
+class AsyncCheckpointer:
+    """Snapshot-now, write-later checkpointing."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[Future] = None
+        self._lock = threading.Lock()
+
+    def save(self, step: int, tree) -> None:
+        self.wait()  # one in flight at a time
+        snapshot = jax.device_get(tree)  # synchronous host copy
+
+        def _write():
+            save_checkpoint(self.directory, step, snapshot)
+            self._gc()
+
+        self._pending = self._pool.submit(_write)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self) -> None:
+        with self._lock:
+            if not os.path.isdir(self.directory):
+                return
+            steps = sorted(int(d.split("_")[1])
+                           for d in os.listdir(self.directory)
+                           if d.startswith("step_")
+                           and not d.endswith(".tmp"))
+            for s in steps[:-self.keep]:
+                shutil.rmtree(os.path.join(
+                    self.directory, f"step_{s:08d}"), ignore_errors=True)

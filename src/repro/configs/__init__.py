@@ -1,0 +1,17 @@
+"""Architecture configs: importing this package registers all archs."""
+from repro.configs import base
+from repro.configs.base import (SHAPES, ShapeCell, cell_is_runnable,
+                                get_config, get_smoke_config, input_specs,
+                                list_archs)
+from repro.configs import (phi3_medium_14b, mistral_large_123b, stablelm_12b,
+                           granite_3_2b, qwen3_moe_30b_a3b, mixtral_8x7b,
+                           zamba2_7b, falcon_mamba_7b, llava_next_mistral_7b,
+                           seamless_m4t_large_v2)
+from repro.configs.caps_benchmarks import (CAPS_BENCHMARKS, CapsConfig,
+                                           smoke_caps)
+
+__all__ = [
+    "SHAPES", "ShapeCell", "cell_is_runnable", "get_config",
+    "get_smoke_config", "input_specs", "list_archs", "CAPS_BENCHMARKS",
+    "CapsConfig", "smoke_caps",
+]

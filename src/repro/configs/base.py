@@ -1,0 +1,123 @@
+"""Config registry: assigned architectures × input shapes (task spec).
+
+Each architecture module registers its exact published configuration
+(sources cited per-file); shapes are the four task-assigned cells:
+
+    train_4k      seq_len=4,096   global_batch=256   (training)
+    prefill_32k   seq_len=32,768  global_batch=32    (inference prefill)
+    decode_32k    seq_len=32,768  global_batch=128   (inference decode)
+    long_500k     seq_len=524,288 global_batch=1     (long-context decode;
+                  sub-quadratic archs only — DESIGN.md §4 records the skips)
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — the
+dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs that may run long_500k (sub-quadratic attention / SSM / SWA)
+SUBQUADRATIC = {"falcon-mamba-7b", "zamba2-7b", "mixtral-8x7b"}
+
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+# reduced-size factory per arch for CPU smoke tests
+_SMOKE_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ArchConfig],
+             smoke: Callable[[], ArchConfig]) -> None:
+    _REGISTRY[name] = full
+    _SMOKE_REGISTRY[name] = smoke
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _SMOKE_REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def cell_is_runnable(arch: str, shape: str) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell per the task rules."""
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "SKIP: long_500k needs sub-quadratic attention " \
+                      "(pure full-attention arch; DESIGN.md §4)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCell,
+                num_microbatches: int = 1) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens, labels} (+ frontend stubs), microbatch-stacked when
+             num_microbatches > 1: (n_micro, mb, S).
+    prefill: {tokens} (+ stubs).
+    decode:  {tokens (B, 1)}; the KV/SSM cache of length seq_len is part of
+             the lowered function's carried state, not an input spec.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if shape.kind == "decode":
+        return {"tokens": tok(B, 1)}
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    s_text = S
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_img_tokens
+    if shape.kind == "train":
+        mb = B // num_microbatches
+        lead = (num_microbatches, mb) if num_microbatches > 1 else (B,)
+        specs["tokens"] = jax.ShapeDtypeStruct((*lead, s_text), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((*lead, s_text), i32)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (*lead, cfg.n_img_tokens, cfg.d_model), bf16)
+        if cfg.enc_dec:
+            src = cfg.source_len or S
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (*lead, src, cfg.d_model), bf16)
+    else:  # prefill
+        specs["tokens"] = tok(B, s_text)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), bf16)
+        if cfg.enc_dec:
+            src = cfg.source_len or S
+            specs["frames"] = jax.ShapeDtypeStruct((B, src, cfg.d_model),
+                                                   bf16)
+    return specs

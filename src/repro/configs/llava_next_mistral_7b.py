@@ -1,0 +1,31 @@
+"""llava-next-mistral-7b [vlm] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000 — anyres tiling [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified].
+
+The modality frontend is a STUB per the task spec: ``input_specs()``
+provides precomputed patch embeddings (B, n_img_tokens, d_model); anyres
+tiling would produce up to ~2880 tokens — we fix 2304 (4 tiles × 576) and a
+single learned projection.  Backbone = Mistral-7B.
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import ArchConfig
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-mistral-7b", family="vlm", n_layers=32,
+        d_model=4096, n_heads=32, n_kv=8, d_head=128, d_ff=14336,
+        vocab=32000, norm_type="rms", rope_theta=1e6, n_img_tokens=2304)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-mistral-7b-smoke", family="vlm", n_layers=2,
+        d_model=64, n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+        norm_type="rms", n_img_tokens=16, attn_chunk=32, remat=False,
+        dtype=jnp.float32)
+
+
+base.register("llava-next-mistral-7b", full, smoke)

@@ -1,0 +1,36 @@
+"""mixtral-8x7b [moe] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, MoE 8e top-2, SWA [arXiv:2401.04088; hf].
+
+Sliding-window attention (4096) makes this arch sub-quadratic → it runs the
+long_500k cell with a rolling KV cache (DESIGN.md §4).
+
+sub_experts=2: 8 experts don't divide the 16-way model axis, so each expert
+is stored as 2 d_ff-slices (EP x TP hybrid; see models/moe.py) — 16 sub-
+experts of hidden 7168 map 1:1 onto the production model axis.
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import ArchConfig
+from repro.models.moe import MoEConfig
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv=8, d_head=128, d_ff=0, vocab=32000,
+        norm_type="rms", rope_theta=1e6, sliding_window=4096,
+        moe=MoEConfig(d_model=4096, d_ff=14336, n_experts=8, top_k=2,
+                      sub_experts=2))
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="mixtral-8x7b-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv=2, d_head=16, d_ff=0, vocab=256, norm_type="rms",
+        sliding_window=32, attn_chunk=32, remat=False, dtype=jnp.float32,
+        moe=MoEConfig(d_model=64, d_ff=32, n_experts=4, top_k=2,
+                      sub_experts=2))
+
+
+base.register("mixtral-8x7b", full, smoke)

@@ -1,0 +1,27 @@
+"""phi3-medium-14b [dense] — 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352 — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+
+H=40 is not divisible by the 16-way model axis → attention uses the
+sequence-sharded plan (attn_plan="seq_tp", DESIGN.md §5).
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import ArchConfig
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="phi3-medium-14b", family="dense", n_layers=40, d_model=5120,
+        n_heads=40, n_kv=10, d_head=128, d_ff=17920, vocab=100352,
+        norm_type="rms", rope_theta=1e4, attn_plan="seq_tp")
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="phi3-medium-14b-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+        norm_type="rms", attn_chunk=32, remat=False, dtype=jnp.float32)
+
+
+base.register("phi3-medium-14b", full, smoke)

@@ -1,0 +1,33 @@
+"""seamless-m4t-large-v2 [audio] — 24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206 — enc-dec, multimodal [arXiv:2308.11596; hf].
+
+The audio frontend is a STUB per the task spec: ``input_specs()`` provides
+precomputed frame embeddings (B, source_len, d_model).  The spec lists the
+24L/1024/16H/8192 backbone; we mirror it as 24 encoder + 24 decoder layers
+(text decoder) with per-layer cross-attention.  vocab padded 256206→256256.
+Decode shapes exercise the text decoder (enc-dec, not encoder-only — decode
+cells run; DESIGN.md §4).
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import ArchConfig
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-large-v2", family="audio", n_layers=24,
+        d_model=1024, n_heads=16, n_kv=16, d_head=64, d_ff=8192,
+        vocab=256206, norm_type="ln", rope_theta=1e4, enc_dec=True,
+        n_enc_layers=24, source_len=4096)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="seamless-m4t-large-v2-smoke", family="audio", n_layers=2,
+        d_model=64, n_heads=4, n_kv=4, d_head=16, d_ff=128, vocab=256,
+        norm_type="ln", enc_dec=True, n_enc_layers=2, source_len=32,
+        attn_chunk=32, remat=False, dtype=jnp.float32)
+
+
+base.register("seamless-m4t-large-v2", full, smoke)

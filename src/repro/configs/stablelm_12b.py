@@ -1,0 +1,26 @@
+"""stablelm-12b [dense] — 40L d_model=5120 32H (GQA kv=8) d_ff=13824
+vocab=100352 [hf:stabilityai/stablelm-2-1_6b; hf].
+
+Uses LayerNorm (with bias) per the StableLM-2 family; d_head = 5120/32 = 160.
+"""
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models.lm import ArchConfig
+
+
+def full() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-12b", family="dense", n_layers=40, d_model=5120,
+        n_heads=32, n_kv=8, d_head=160, d_ff=13824, vocab=100352,
+        norm_type="ln", rope_theta=1e4)
+
+
+def smoke() -> ArchConfig:
+    return ArchConfig(
+        name="stablelm-12b-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv=2, d_head=16, d_ff=128, vocab=256,
+        norm_type="ln", attn_chunk=32, remat=False, dtype=jnp.float32)
+
+
+base.register("stablelm-12b", full, smoke)

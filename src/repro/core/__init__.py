@@ -1,0 +1,17 @@
+"""PIM-CapsNet core: routing procedure, distribution planner, approximations.
+
+The paper's primary contribution as a composable JAX module — see DESIGN.md.
+"""
+from repro.core.routing import (RoutingConfig, dynamic_routing,
+                                routing_iteration, make_sharded_routing)
+from repro.core.distribution import (RPShape, DeviceModel, plan, score_table,
+                                     workload_E, comm_M, execution_score,
+                                     moe_plan, MoEShape, rmas_optimal_grant)
+from repro.core import approx, capsule_layers, em_routing, pipeline
+
+__all__ = [
+    "RoutingConfig", "dynamic_routing", "routing_iteration",
+    "make_sharded_routing", "RPShape", "DeviceModel", "plan", "score_table",
+    "workload_E", "comm_M", "execution_score", "moe_plan", "MoEShape",
+    "rmas_optimal_grant", "approx", "capsule_layers", "em_routing", "pipeline",
+]

@@ -1,0 +1,125 @@
+"""CapsNet layers (paper §2.1): Conv stack, PrimaryCaps, CapsLayer (Eq.1 + RP).
+
+Parameters are plain pytrees (nested dicts) created by ``init_*`` functions;
+forward passes are pure functions — the repo-wide convention (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import routing as routing_lib
+from repro.core.approx import exact_squash
+
+
+def conv2d(x: jax.Array, w: jax.Array, b: jax.Array, stride: int = 1,
+           padding: str = "VALID") -> jax.Array:
+    """NHWC conv. w: (kh, kw, cin, cout)."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def init_conv(key, kh, kw, cin, cout, scale=None):
+    scale = scale or (1.0 / jnp.sqrt(kh * kw * cin))
+    kw_, kb_ = jax.random.split(key)
+    return {"w": jax.random.normal(kw_, (kh, kw, cin, cout), jnp.float32) * scale,
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+class PrimaryCapsConfig(NamedTuple):
+    """Conv -> PrimaryCaps mapping (paper Fig.2; CapsNet-MNIST defaults)."""
+    conv1_channels: int = 256
+    conv1_kernel: int = 9
+    caps_channels: int = 32      # capsule map count
+    caps_dim: int = 8            # C_L
+    caps_kernel: int = 9
+    caps_stride: int = 2
+
+
+def init_primary_caps(key, in_channels: int, cfg: PrimaryCapsConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "conv1": init_conv(k1, cfg.conv1_kernel, cfg.conv1_kernel,
+                           in_channels, cfg.conv1_channels),
+        "caps_conv": init_conv(k2, cfg.caps_kernel, cfg.caps_kernel,
+                               cfg.conv1_channels,
+                               cfg.caps_channels * cfg.caps_dim),
+    }
+
+
+def primary_caps_forward(params, x: jax.Array, cfg: PrimaryCapsConfig
+                         ) -> jax.Array:
+    """x: (B,H,W,C) image -> u: (B, N_L, C_L) squashed primary capsules."""
+    h = jax.nn.relu(conv2d(x, params["conv1"]["w"], params["conv1"]["b"]))
+    h = conv2d(h, params["caps_conv"]["w"], params["caps_conv"]["b"],
+               stride=cfg.caps_stride)
+    B, H, W, _ = h.shape
+    u = h.reshape(B, H * W * cfg.caps_channels, cfg.caps_dim)
+    return exact_squash(u, axis=-1)
+
+
+def init_caps_layer(key, n_l: int, n_h: int, c_l: int, c_h: int):
+    """W: (N_L, N_H, C_L, C_H) — the Eq.1 prediction weight."""
+    scale = 1.0 / jnp.sqrt(c_l)
+    return {"W": jax.random.normal(key, (n_l, n_h, c_l, c_h),
+                                   jnp.float32) * scale}
+
+
+def predict_votes(params, u: jax.Array) -> jax.Array:
+    """Eq.1: u_hat[k,i,j] = u[k,i] @ W[i,j].   u:(B,L,C_L) -> (B,L,H,C_H)."""
+    return jnp.einsum("blc,lhcd->blhd", u, params["W"])
+
+
+def caps_layer_forward(params, u: jax.Array,
+                       cfg: routing_lib.RoutingConfig) -> jax.Array:
+    """Full Caps layer: Eq.1 votes + routing procedure.  -> v:(B,H,C_H)."""
+    u_hat = predict_votes(params, u)
+    return routing_lib.dynamic_routing(u_hat, cfg)
+
+
+# --- decoding stage (paper §2.1: FC reconstruction decoder) ----------------
+
+def init_dense(key, din, dout):
+    return {"w": jax.random.normal(key, (din, dout), jnp.float32)
+            / jnp.sqrt(din),
+            "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def init_decoder(key, n_h: int, c_h: int, out_dim: int,
+                 hidden=(512, 1024)):
+    keys = jax.random.split(key, len(hidden) + 1)
+    dims = [n_h * c_h, *hidden, out_dim]
+    return {f"fc{i}": init_dense(keys[i], dims[i], dims[i + 1])
+            for i in range(len(dims) - 1)}
+
+
+def decoder_forward(params, v: jax.Array, labels: jax.Array | None = None
+                    ) -> jax.Array:
+    """Reconstruction decoder: mask all but the (label|longest) capsule."""
+    B, H, C = v.shape
+    norms = jnp.linalg.norm(v, axis=-1)
+    idx = jnp.argmax(norms, axis=-1) if labels is None else labels
+    mask = jax.nn.one_hot(idx, H, dtype=v.dtype)[..., None]
+    h = (v * mask).reshape(B, H * C)
+    n = len(params)
+    for i in range(n):
+        p = params[f"fc{i}"]
+        h = h @ p["w"] + p["b"]
+        h = jax.nn.relu(h) if i < n - 1 else jax.nn.sigmoid(h)
+    return h
+
+
+def margin_loss(v: jax.Array, labels: jax.Array, n_classes: int,
+                m_pos: float = 0.9, m_neg: float = 0.1,
+                lam: float = 0.5) -> jax.Array:
+    """CapsNet margin loss [Sabour et al. 2017, Eq.4]."""
+    norms = jnp.linalg.norm(v, axis=-1)  # (B, H)
+    t = jax.nn.one_hot(labels, n_classes, dtype=norms.dtype)
+    l_pos = t * jnp.square(jnp.maximum(0.0, m_pos - norms))
+    l_neg = lam * (1.0 - t) * jnp.square(jnp.maximum(0.0, norms - m_neg))
+    return jnp.mean(jnp.sum(l_pos + l_neg, axis=-1))

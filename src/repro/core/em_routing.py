@@ -1,0 +1,97 @@
+"""EM routing [Hinton, Sabour, Frosst 2018] — paper §2.2: "the routing
+algorithms (e.g., Dynamic Routing, Expectation-Maximization Routing) share the
+similar execution pattern", and PIM-CapsNet's optimisations "can be easily
+applied to other routing algorithms with simple adjustment".
+
+We implement matrix-capsule EM routing over the same (B,L,H,C) vote layout so
+that the distribution planner (core.distribution) and the sharded execution
+path (psum placement) carry over: the E-step aggregates over H (softmax-like),
+the M-step aggregates over L — the same Table-2 dimension structure.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class EMRoutingConfig(NamedTuple):
+    iterations: int = 3
+    beta_a: float = 1.0          # activation bias
+    beta_u: float = 1.0          # per-dim cost bias
+    inv_temp: float = 1.0        # lambda schedule base
+    sharded_dim: Optional[str] = None   # "B" | "L" | None
+    axis_name: Optional[str] = None
+    eps: float = 1e-9
+
+
+def em_routing(votes: jax.Array, a_in: jax.Array,
+               cfg: EMRoutingConfig = EMRoutingConfig()):
+    """votes: (B,L,H,C) vote vectors; a_in: (B,L) L-capsule activations.
+
+    Returns (pose (B,H,C), a_out (B,H)).
+    """
+    votes = votes.astype(jnp.float32)
+    B, L, H, C = votes.shape
+    r = jnp.full((B, L, H), 1.0 / H, jnp.float32)
+
+    def psum_l(x):
+        if cfg.sharded_dim == "L":
+            return lax.psum(x, cfg.axis_name)
+        return x
+
+    mu = jnp.zeros((B, H, C), jnp.float32)
+    sigma2 = jnp.ones((B, H, C), jnp.float32)
+    a_out = jnp.zeros((B, H), jnp.float32)
+
+    for it in range(cfg.iterations):
+        lam = cfg.inv_temp * (1.0 - 0.95 ** (it + 1))
+        # ---- M-step: per-H Gaussian stats, aggregation over L ----
+        rw = r * a_in[..., None]                       # (B,L,H)
+        r_sum = psum_l(jnp.sum(rw, axis=1)) + cfg.eps  # (B,H)
+        mu = psum_l(jnp.einsum("blh,blhc->bhc", rw, votes)) / r_sum[..., None]
+        diff2 = jnp.square(votes - mu[:, None])
+        sigma2 = psum_l(jnp.einsum("blh,blhc->bhc", rw, diff2)) \
+            / r_sum[..., None] + cfg.eps
+        cost = (cfg.beta_u + 0.5 * jnp.log(sigma2)) * r_sum[..., None]
+        a_out = jax.nn.sigmoid(lam * (cfg.beta_a - jnp.sum(cost, axis=-1)))
+        # ---- E-step: responsibilities, softmax over H (local if H unsharded)
+        log_p = -0.5 * jnp.sum(jnp.log(2.0 * jnp.pi * sigma2[:, None])
+                               + diff2 / sigma2[:, None], axis=-1)  # (B,L,H)
+        logits = jnp.log(a_out[:, None] + cfg.eps) + log_p
+        r = jax.nn.softmax(logits, axis=-1)
+    return mu, a_out
+
+
+def make_sharded_em_routing(mesh, dim: str, axis_name: str,
+                            cfg: EMRoutingConfig = EMRoutingConfig()):
+    """The paper's §5.1 distribution applied to EM routing (its claimed
+    generality: "can be easily applied to other routing algorithms").
+
+    dim "L": the M-step's three L-aggregations become psums on
+    ``axis_name`` (the same Table-2 structure as Dynamic Routing's Eq.2);
+    dim "B": every batch shard is independent — no collectives at all
+    (EM's statistics are per-input, unlike Dynamic Routing's shared b).
+    """
+    import functools
+    P = jax.sharding.PartitionSpec
+    if dim not in ("B", "L"):
+        raise ValueError("EM routing shards on B or L (H-sharding would "
+                         "split the per-H Gaussian statistics)")
+    votes_spec = {"B": P(axis_name, None, None, None),
+                  "L": P(None, axis_name, None, None)}[dim]
+    a_spec = {"B": P(axis_name, None), "L": P(None, axis_name)}[dim]
+    out_specs = ({"B": P(axis_name, None, None), "L": P(None, None, None)}[dim],
+                 {"B": P(axis_name, None), "L": P(None, None)}[dim])
+    run_cfg = cfg._replace(sharded_dim=dim if dim == "L" else None,
+                           axis_name=axis_name if dim == "L" else None)
+
+    @functools.partial(jax.shard_map, mesh=mesh,
+                       in_specs=(votes_spec, a_spec), out_specs=out_specs,
+                       check_vma=False)
+    def routed(votes_local, a_local):
+        return em_routing(votes_local, a_local, run_cfg)
+
+    return routed

@@ -1,0 +1,104 @@
+"""Paper §4 — host || PIM pipelined execution, TPU form.
+
+The paper overlaps the host GPU (Conv/FC layers of batch k+1) with the HMC
+(routing procedure of batch k).  On a homogeneous TPU mesh the idiomatic
+equivalent (DESIGN.md §2) is a two-stage pipeline over *disjoint device
+groups*: one mesh axis ("pipe", e.g. the production mesh's "pod" axis) hosts
+the stages, microbatches flow through with a one-tick skew, and the hand-off
+is a ``lax.ppermute`` — compute of both stages overlaps exactly like the
+paper's Fig.8 timeline.
+
+Two entry points:
+  * ``two_stage_pipeline``     — shard_map program for a 2-sized mesh axis
+                                 (stage 0 = encoder / "host", stage 1 =
+                                 routing / "PIM").
+  * ``software_pipeline_scan`` — single-group microbatch overlap expressed as
+                                 a skewed ``lax.scan`` (XLA overlaps the
+                                 independent stage ops; used on 1-axis meshes
+                                 and in tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+P = jax.sharding.PartitionSpec
+
+
+def software_pipeline_scan(stage_a: Callable, stage_b: Callable,
+                           micro_inputs: jax.Array) -> jax.Array:
+    """Skewed scan: at tick t, stage_b consumes stage_a's output from t-1
+    while stage_a produces t's — the two are data-independent within a tick,
+    so XLA's scheduler may overlap them (on one device this documents the
+    dependence structure; on two pipeline shards use ``two_stage_pipeline``).
+
+    micro_inputs: (n_micro, ...) stacked microbatches.
+    Returns stacked stage_b outputs, (n_micro, ...).
+    """
+    n = micro_inputs.shape[0]
+    a0 = stage_a(micro_inputs[0])
+
+    def tick(carry, x_next):
+        prev_a = carry
+        b_out = stage_b(prev_a)          # bubble-filled stage B
+        a_out = stage_a(x_next)          # independent of b_out
+        return a_out, b_out
+
+    last_a, outs = lax.scan(tick, a0, micro_inputs[1:])
+    final = stage_b(last_a)
+    return jnp.concatenate([outs, final[None]], axis=0)
+
+
+def two_stage_pipeline(stage_a: Callable, stage_b: Callable,
+                       mesh: jax.sharding.Mesh, axis: str,
+                       a_out_shape: jax.ShapeDtypeStruct):
+    """Build a pipelined runner over a 2-sized mesh axis.
+
+    stage_a: microbatch -> hidden        (runs on pipe rank 0, the "host")
+    stage_b: hidden -> output            (runs on pipe rank 1, the "PIM")
+
+    Returns f(micro_inputs:(n_micro, ...)) -> (n_micro, ...) outputs.
+    Inputs/outputs live replicated on the axis; hidden states cross stages
+    via ppermute.  n_micro ticks + 1 bubble tick; at every interior tick both
+    stages execute concurrently on their own devices (paper Fig.8 overlap).
+    """
+    if mesh.shape[axis] != 2:
+        raise ValueError(f"two_stage_pipeline needs |{axis}| == 2, "
+                         f"got {mesh.shape[axis]}")
+
+    def per_device(micro_inputs):
+        stage = lax.axis_index(axis)
+        n = micro_inputs.shape[0]
+        zero_hidden = jnp.zeros(a_out_shape.shape, a_out_shape.dtype)
+
+        def tick(carry, t):
+            inbox = carry
+            # stage 0 computes A on microbatch t (guard t<n for drain tick)
+            xa = micro_inputs[jnp.minimum(t, n - 1)]
+            a_out = lax.cond(stage == 0,
+                             lambda: stage_a(xa).astype(a_out_shape.dtype),
+                             lambda: zero_hidden)
+            # stage 1 computes B on what arrived last tick
+            b_out = lax.cond(stage == 1,
+                             lambda: stage_b(inbox),
+                             lambda: jnp.zeros_like(stage_b(zero_hidden)))
+            # hand-off: rank0 -> rank1
+            new_inbox = lax.ppermute(a_out, axis, [(0, 1)])
+            return new_inbox, b_out
+
+        _, b_hist = lax.scan(tick, zero_hidden, jnp.arange(n + 1))
+        # tick t emitted B(microbatch t-1); drop the bubble tick 0.
+        outs = b_hist[1:]
+        # results live on stage 1; broadcast so out_specs can be replicated.
+        return lax.psum(jnp.where(stage == 1, outs, jnp.zeros_like(outs)),
+                        axis)
+
+    return jax.jit(jax.shard_map(
+        per_device, mesh=mesh,
+        in_specs=P(*(None,) * 1),      # microbatches replicated on `axis`
+        out_specs=P(),                 # outputs replicated
+        check_vma=False))

@@ -1,0 +1,177 @@
+"""Dynamic routing procedure (paper Algorithm 1 / Eq.1-5), distribution-aware.
+
+The routing procedure routes L low-level capsules to H high-level capsules:
+
+    u_hat[k,i,j]   = u[k,i] @ W[i,j]                       (Eq.1, done by caller)
+    repeat I times:
+        c[i,j]     = softmax_j(b[i,j])                     (Eq.5)
+        s[k,j]     = sum_i u_hat[k,i,j] * c[i,j]           (Eq.2)
+        v[k,j]     = squash(s[k,j])                        (Eq.3)
+        b[i,j]    += sum_k <v[k,j], u_hat[k,i,j]>          (Eq.4)
+
+Distribution (paper §5.1): every equation is independently parallel along at
+least one of {B, L, H} (paper Table 2) but no dimension parallelises all five,
+so sharding one dimension leaves a small set of cross-shard aggregations:
+
+    shard B  ->  Eq.4's sum over k crosses shards          (psum of b-updates)
+    shard L  ->  Eq.2's sum over i crosses shards          (psum of s)
+    shard H  ->  Eq.5's softmax denominator crosses shards (psum of max/sum)
+
+``dynamic_routing`` is written so the same code runs (a) unsharded, (b) under
+``jax.shard_map`` with any one of the three logical dims mapped to a mesh axis
+— the caller passes ``sharded_dim`` + ``axis_name`` and the required psum is
+inserted exactly where the paper's inter-vault aggregation happens.  The
+pre-aggregation optimisation (paper §5.1.2: combine per-vault partial b before
+the global aggregation) is what ``lax.psum`` of the locally-summed update does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import approx
+
+ShardedDim = Optional[Literal["B", "L", "H"]]
+
+
+class RoutingConfig(NamedTuple):
+    """Static routing configuration.
+
+    iterations:   paper Table 1 "Iter" (3..9).
+    use_approx:   paper §5.2.2 PE approximations for exp / rsqrt / div.
+    sharded_dim:  which logical dimension is sharded across the mesh axis
+                  ``axis_name`` (paper §5.1 inter-vault distribution choice).
+    axes:         multi-dimensional generalization (beyond-paper, §Perf):
+                  {"B": axis, "L": axis, ...} shards several logical dims at
+                  once (e.g. B over "data" x L over "model" on the 2D
+                  torus); overrides sharded_dim/axis_name when set.
+    fused:        route via the Pallas fused-iteration kernel where available
+                  (kernels/routing); pure-jnp path otherwise.
+    """
+    iterations: int = 3
+    use_approx: bool = False
+    sharded_dim: ShardedDim = None
+    axis_name: Optional[str] = None
+    fused: bool = False
+    axes: Optional[tuple] = None    # tuple of (dim, axis_name) pairs
+
+    def axis_of(self, dim: str) -> Optional[str]:
+        if self.axes is not None:
+            for d, a in self.axes:
+                if d == dim:
+                    return a
+            return None
+        return self.axis_name if self.sharded_dim == dim else None
+
+
+def _softmax(b: jax.Array, cfg: RoutingConfig) -> jax.Array:
+    """softmax over the H dim of b:(L,H); cross-shard when H is sharded."""
+    h_axis = cfg.axis_of("H")
+    if h_axis is not None:
+        m = lax.pmax(jnp.max(b, axis=-1, keepdims=True), h_axis)
+        e = (approx.fast_exp(b - m) if cfg.use_approx
+             else jnp.exp(b - m))
+        denom = lax.psum(jnp.sum(e, axis=-1, keepdims=True), h_axis)
+        if cfg.use_approx:
+            return e * approx.fast_reciprocal(denom)
+        return e / denom
+    if cfg.use_approx:
+        return approx.approx_softmax(b, axis=-1)
+    return jax.nn.softmax(b, axis=-1)
+
+
+def _squash(s: jax.Array, cfg: RoutingConfig) -> jax.Array:
+    if cfg.use_approx:
+        return approx.approx_squash(s, axis=-1)
+    return approx.exact_squash(s, axis=-1)
+
+
+def routing_iteration(u_hat: jax.Array, b: jax.Array, cfg: RoutingConfig
+                      ) -> tuple[jax.Array, jax.Array]:
+    """One full routing iteration. u_hat:(B,L,H,C)  b:(L,H) -> (v, new_b)."""
+    c = _softmax(b, cfg)                                   # Eq.5
+    s = jnp.einsum("blhc,lh->bhc", u_hat, c)               # Eq.2
+    l_axis = cfg.axis_of("L")
+    if l_axis is not None:
+        s = lax.psum(s, l_axis)                            # inter-vault aggregation
+    v = _squash(s, cfg)                                    # Eq.3
+    db = jnp.einsum("blhc,bhc->lh", u_hat, v)              # Eq.4 (local pre-agg)
+    b_axis = cfg.axis_of("B")
+    if b_axis is not None:
+        db = lax.psum(db, b_axis)                          # inter-vault aggregation
+    return v, b + db
+
+
+def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
+                    ) -> jax.Array:
+    """Run the full routing procedure.  u_hat:(B,L,H,C) -> v:(B,H,C).
+
+    The iteration loop is a ``lax.scan`` carrying b (the paper's strong
+    sequential dependency, §2.2 summary point (1)).  The final iteration's v
+    is the routed H-capsule output.
+    """
+    if cfg.fused:
+        from repro.kernels.routing import ops as routing_ops
+        return routing_ops.dynamic_routing_fused(
+            u_hat, iterations=cfg.iterations, use_approx=cfg.use_approx)
+
+    u_hat = u_hat.astype(jnp.float32)
+    B, L, H, C = u_hat.shape
+    b0 = jnp.zeros((L, H), jnp.float32)
+
+    def step(b, _):
+        v, b_new = routing_iteration(u_hat, b, cfg)
+        return b_new, v
+
+    _, vs = lax.scan(step, b0, None, length=cfg.iterations)
+    return vs[-1]
+
+
+def dynamic_routing_with_stats(u_hat: jax.Array,
+                               cfg: RoutingConfig = RoutingConfig()):
+    """Like ``dynamic_routing`` but also returns (b, c) for inspection/tests."""
+    u_hat = u_hat.astype(jnp.float32)
+    B, L, H, C = u_hat.shape
+    b = jnp.zeros((L, H), jnp.float32)
+    v = jnp.zeros((B, H, C), jnp.float32)
+    for _ in range(cfg.iterations):
+        v, b = routing_iteration(u_hat, b, cfg)
+    return v, b, _softmax(b, cfg)
+
+
+def make_sharded_routing(mesh: jax.sharding.Mesh, dim: ShardedDim,
+                         axis_name: str, cfg: RoutingConfig):
+    """Wrap dynamic_routing in shard_map with ``dim`` sharded over ``axis_name``.
+
+    This is the executable form of the paper's inter-vault distribution: the
+    returned callable takes a *global* u_hat and runs the RP with the chosen
+    dimension spread across the mesh axis (vaults), inserting exactly the
+    aggregation collectives the paper's M-term models (Eq.8/10/12).
+    """
+    return make_multi_sharded_routing(mesh, ((dim, axis_name),), cfg)
+
+
+def make_multi_sharded_routing(mesh: jax.sharding.Mesh, axes, cfg):
+    """Beyond-paper generalization (§Perf): shard SEVERAL logical dims at
+    once, e.g. B over "data" x L over "model" on the pod's 2D torus —
+    aggregations localize to one mesh ring each instead of a global group.
+
+    axes: tuple of (dim, mesh_axis) pairs, dims from {"B", "L", "H"}.
+    """
+    P = jax.sharding.PartitionSpec
+    ax = dict(axes)
+    in_spec = P(ax.get("B"), ax.get("L"), ax.get("H"), None)
+    out_spec = P(ax.get("B"), ax.get("H"), None)
+    run_cfg = cfg._replace(axes=tuple(axes), sharded_dim=None,
+                           axis_name=None)
+
+    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(in_spec,),
+                       out_specs=out_spec, check_vma=False)
+    def routed(u_hat_local):
+        return dynamic_routing(u_hat_local, run_cfg)
+
+    return routed

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (SyntheticCapsDataset, SyntheticLMDataset,
+                                  caps_batch_iterator, lm_batch_iterator)
+
+__all__ = ["SyntheticCapsDataset", "SyntheticLMDataset",
+           "caps_batch_iterator", "lm_batch_iterator"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers (DESIGN.md §6).
+
+Each subpackage follows the repo convention:
+  kernel.py — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+  ops.py    — jitted public wrapper (block-size selection, shape handling)
+  ref.py    — pure-jnp oracle the kernel is tested against
+
+Kernels are written for TPU as the *target* and validated with
+``interpret=True`` on CPU (this container has no TPU).
+"""

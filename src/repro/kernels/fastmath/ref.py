@@ -1,0 +1,23 @@
+"""Exact oracles for the fastmath approximation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exp_ref(x: jax.Array) -> jax.Array:
+    return jnp.exp(x.astype(jnp.float32))
+
+
+def inv_sqrt_ref(x: jax.Array) -> jax.Array:
+    return 1.0 / jnp.sqrt(x.astype(jnp.float32))
+
+
+def reciprocal_ref(x: jax.Array) -> jax.Array:
+    return 1.0 / x.astype(jnp.float32)
+
+
+def squash_ref(s: jax.Array) -> jax.Array:
+    s = s.astype(jnp.float32)
+    n2 = jnp.sum(s * s, axis=-1, keepdims=True)
+    return s * (n2 / (1.0 + n2)) / jnp.sqrt(n2 + 1e-9)

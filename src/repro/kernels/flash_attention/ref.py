@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-attention kernel (full materialised softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+            scale: float | None = None) -> jax.Array:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0 (GQA).
+
+    Returns (B, Hq, S, D).  fp32 softmax accumulation.
+    """
+    B, Hq, S, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D).astype(jnp.float32)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)

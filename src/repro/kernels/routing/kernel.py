@@ -1,0 +1,130 @@
+"""Fused dynamic-routing iteration as a Pallas TPU kernel.
+
+Paper hook (§5.2, DESIGN.md §2): the intra-vault PEs process the RP chain next
+to the data so intermediates never cross the off-chip boundary.  The TPU-native
+equivalent: one ``pallas_call`` per routing iteration that streams the only
+large operand — the prediction vectors ``u_hat`` (B,L,H,C) — HBM→VMEM exactly
+once, and keeps every intermediate (b-update, softmax, weighted partial sums)
+VMEM-resident.  The naive formulation (ref.py / the paper's GPU baseline)
+materialises O(B·L·H·C) intermediates per iteration *twice* (c·û products and
+agreement tensors) and re-reads û twice; this kernel reads û once and writes
+nothing but the (L,H) logits and (B,H,C) partial sums.
+
+Lazy-update schedule (proved equivalent in ref.py): when a tile of L rows is
+resident for iteration t we first fold in iteration t-1's agreement update for
+those rows (db = Σ_k û·v_prev), then softmax, then accumulate s.  This is what
+collapses two û passes per iteration into one.
+
+Arithmetic intensity of the fused op: 4 FLOP per 4-byte û element — firmly
+memory-bound, matching the paper's characterisation; the kernel therefore
+optimises DMA volume, not MXU utilisation.
+
+Grid/BlockSpec: grid = (num_L_tiles,); û block (B, L_t, H, C) with (H, C) as
+the tiled trailing dims; s output block (B, H, C) maps every grid step to the
+same block and is accumulated in place (init at step 0).  TPU layout note:
+C (the capsule dim, 8..16) under-fills the 128-lane vregs; a lane-packed
+(B, L_t, H·C) variant avoiding the relayout is noted as future work — the
+kernel is bandwidth-bound either way (see §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core.approx import (EXP_AVG, EXP_RECOVERY, LOG2E, RECIP_RECOVERY,
+                               _F32_BIAS, _F32_MANT)
+
+
+def _fast_exp_inkernel(x):
+    y = LOG2E * x + (_F32_BIAS + EXP_AVG)
+    y = jnp.clip(y, 0.0, 254.999)
+    bits = (y * _F32_MANT).astype(jnp.int32)
+    return lax.bitcast_convert_type(bits, jnp.float32) * jnp.float32(EXP_RECOVERY)
+
+
+def _fast_recip_inkernel(x):
+    i = jnp.int32(0x7EF311C2) - lax.bitcast_convert_type(x, jnp.int32)
+    y = lax.bitcast_convert_type(i, jnp.float32)
+    y = y * (2.0 - x * y)
+    return y * jnp.float32(RECIP_RECOVERY)
+
+
+def _routing_iter_kernel(u_ref, b_ref, v_ref, s_ref, b_out_ref, *,
+                         use_approx: bool):
+    """One grid step = one L tile.
+
+    u_ref: (B, L_t, H, C) û tile          (streamed, read once)
+    b_ref: (L_t, H) routing logits tile   (read)
+    v_ref: (B, H, C) previous v           (small, replicated across steps)
+    s_ref: (B, H, C) output partial sums  (accumulated across grid steps)
+    b_out_ref: (L_t, H) updated logits    (written once per tile)
+    """
+    u = u_ref[...].astype(jnp.float32)          # (B, L_t, H, C)
+    v_prev = v_ref[...].astype(jnp.float32)     # (B, H, C)
+
+    # --- deferred Eq.4: db[l,h] = sum_{k,c} û[k,l,h,c] * v_prev[k,h,c]
+    db = jnp.sum(u * v_prev[:, None], axis=(0, 3))          # (L_t, H)
+    b_new = b_ref[...] + db
+    b_out_ref[...] = b_new
+
+    # --- Eq.5 softmax over H (rows independent; H fully resident)
+    m = jnp.max(b_new, axis=-1, keepdims=True)
+    if use_approx:
+        e = _fast_exp_inkernel(b_new - m)
+        c = e * _fast_recip_inkernel(jnp.sum(e, axis=-1, keepdims=True))
+    else:
+        e = jnp.exp(b_new - m)
+        c = e / jnp.sum(e, axis=-1, keepdims=True)           # (L_t, H)
+
+    # --- Eq.2 partial weighted sum: s[k,h,c] += sum_l c[l,h]·û[k,l,h,c]
+    s_part = jnp.sum(u * c[None, :, :, None], axis=1)        # (B, H, C)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = s_part
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        s_ref[...] += s_part
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l_tile", "use_approx", "interpret"))
+def routing_iteration_fused(u_hat: jax.Array, b: jax.Array, v_prev: jax.Array,
+                            *, l_tile: int = 128, use_approx: bool = False,
+                            interpret: bool = True):
+    """One fused routing iteration.  Returns (s (B,H,C), b_new (L,H)).
+
+    l_tile sizes the VMEM working set: B·l_tile·H·C·4 bytes for the û block
+    (e.g. caps-MNIST B=100, H·C=160, l_tile=128 → 8.2 MB, inside the ~16 MB
+    v5e VMEM budget together with the small b/v/s blocks).
+    """
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    grid = (L // l_tile,)
+    kernel = functools.partial(_routing_iter_kernel, use_approx=use_approx)
+    s, b_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+            jax.ShapeDtypeStruct((L, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u_hat.astype(jnp.float32), b.astype(jnp.float32),
+      v_prev.astype(jnp.float32))
+    return s, b_new

@@ -1,0 +1,68 @@
+"""Jitted public wrapper for the fused routing kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.routing import ref
+from repro.kernels.routing.kernel import routing_iteration_fused
+
+
+def _pick_l_tile(L: int, bytes_budget: int, row_bytes: int,
+                 preferred: int = 128) -> int:
+    """Largest divisor of L that is <= preferred and fits the VMEM budget."""
+    cap = max(1, bytes_budget // max(row_bytes, 1))
+    best = 1
+    for t in range(1, L + 1):
+        if L % t == 0 and t <= min(preferred, cap):
+            best = t
+    return best
+
+
+def dma_bytes_per_call(B: int, L: int, H: int, C: int,
+                       iterations: int = 3) -> dict:
+    """HBM<->VMEM traffic of the fused kernel per routing call, derived
+    from its BlockSpecs (kernel.py): per iteration the grid streams the
+    û tile set exactly once (B*L*H*C fp32 read), reads+writes the (L,H)
+    logits, revisits the small (B,H,C) v/s blocks per L-tile step, and the
+    squash runs on (B,H,C) outside.  The naive jnp path (ref.py) touches
+    û twice per iteration (Eq.2 + Eq.4 einsums) plus materialised
+    intermediates — measured ~5x this bound on the pod dry-run
+    (EXPERIMENTS.md §Perf routing cell).
+    """
+    f = 4  # fp32
+    u = B * L * H * C * f
+    bh = L * H * f
+    vhc = B * H * C * f
+    per_iter = u + 2 * bh + 2 * vhc + 2 * vhc  # û once, b rw, s acc, v read
+    return {"fused_bytes": iterations * per_iter,
+            "naive_bytes": iterations * (2 * u + 2 * bh + 4 * vhc
+                                         + 2 * B * L * H * f),
+            "u_hat_bytes": u}
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
+                                             "l_tile", "interpret"))
+def dynamic_routing_fused(u_hat: jax.Array, *, iterations: int = 3,
+                          use_approx: bool = False, l_tile: int | None = None,
+                          interpret: bool = True) -> jax.Array:
+    """Full routing procedure built from the fused per-iteration kernel.
+
+    u_hat: (B, L, H, C) -> v: (B, H, C).  û crosses HBM→VMEM once per
+    iteration; squash (Eq.3, O(B·H·C)) runs outside the kernel.
+    """
+    u_hat = u_hat.astype(jnp.float32)
+    B, L, H, C = u_hat.shape
+    if l_tile is None:
+        # ~8MB VMEM budget for the û block.
+        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+    b = jnp.zeros((L, H), jnp.float32)
+    v = jnp.zeros((B, H, C), jnp.float32)
+    for _ in range(iterations):
+        s, b = routing_iteration_fused(u_hat, b, v, l_tile=l_tile,
+                                       use_approx=use_approx,
+                                       interpret=interpret)
+        v = ref.squash(s, use_approx)
+    return v

@@ -1,0 +1,58 @@
+"""Pure-jnp oracle for the fused routing-iteration kernel.
+
+Also serves as the *naive GPU-baseline* in benchmarks: every intermediate
+(c-expanded products, agreement tensors) is materialised, which is exactly
+the memory-traffic pathology the paper characterises in §3.2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import approx
+
+
+def softmax_h(b: jax.Array, use_approx: bool = False) -> jax.Array:
+    if use_approx:
+        return approx.approx_softmax(b, axis=-1)
+    return jax.nn.softmax(b, axis=-1)
+
+
+def squash(s: jax.Array, use_approx: bool = False) -> jax.Array:
+    if use_approx:
+        return approx.approx_squash(s, axis=-1)
+    return approx.exact_squash(s, axis=-1)
+
+
+def routing_iteration_ref(u_hat: jax.Array, b: jax.Array, v_prev: jax.Array,
+                          use_approx: bool = False):
+    """One *lazy-update* routing iteration, matching the kernel's schedule:
+
+    given v_prev (the previous iteration's H-capsules, zeros on iteration 0):
+        b'   = b + sum_k <v_prev[k], u_hat[k]>      (Eq.4, deferred)
+        c    = softmax_H(b')                        (Eq.5)
+        s    = sum_i c * u_hat                      (Eq.2)
+    returns (s, b').  The caller applies squash (Eq.3) and loops.
+
+    Algebraically identical to Algorithm 1: iteration t's b-update uses
+    iteration t-1's v, and b0 = 0 with v_prev0 = 0 leaves b unchanged.
+    """
+    u_hat = u_hat.astype(jnp.float32)
+    db = jnp.einsum("blhc,bhc->lh", u_hat, v_prev)
+    b_new = b + db
+    c = softmax_h(b_new, use_approx)
+    s = jnp.einsum("blhc,lh->bhc", u_hat, c)
+    return s, b_new
+
+
+def dynamic_routing_ref(u_hat: jax.Array, iterations: int,
+                        use_approx: bool = False) -> jax.Array:
+    """Full routing loop via the lazy-update schedule. u_hat:(B,L,H,C)->(B,H,C)."""
+    u_hat = u_hat.astype(jnp.float32)
+    B, L, H, C = u_hat.shape
+    b = jnp.zeros((L, H), jnp.float32)
+    v = jnp.zeros((B, H, C), jnp.float32)
+    for _ in range(iterations):
+        s, b = routing_iteration_ref(u_hat, b, v, use_approx)
+        v = squash(s, use_approx)
+    return v

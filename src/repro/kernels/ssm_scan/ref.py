@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the selective-scan kernel (Mamba-1 recurrence).
+
+    h[t] = exp(dt[t] * A) * h[t-1] + (dt[t] * x[t]) ⊗ B[t]
+    y[t] = <h[t], C[t]>_N + D * x[t]
+
+Shapes: x, dt: (Bt, T, Din); A: (Din, N); B, C: (Bt, T, N); D: (Din,).
+Implemented with ``jax.lax.associative_scan`` over T (materialises the
+(Bt, T, Din, N) element tensors — oracle-only; the kernel and the model use
+the chunked streaming form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, A, B, C, D, h0=None):
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bt, T, Din = x.shape
+    N = A.shape[1]
+    a = jnp.exp(dt[..., None] * A[None, None])            # (Bt,T,Din,N)
+    b = (dt * x)[..., None] * B[:, :, None, :]            # (Bt,T,Din,N)
+    if h0 is not None:
+        # fold the initial state into the first element
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = jnp.einsum("btdn,btn->btd", h, C.astype(jnp.float32))
+    return y + D[None, None] * x, h[:, -1]
+
+
+def selective_step_ref(h, x_t, dt_t, A, B_t, C_t, D):
+    """Single decode step.  h: (Bt, Din, N) -> (y_t (Bt,Din), h_new)."""
+    a = jnp.exp(dt_t[..., None] * A[None])                # (Bt,Din,N)
+    h_new = a * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h_new, C_t) + D[None] * x_t
+    return y, h_new

@@ -1,0 +1,478 @@
+"""Trip-count-aware analysis of optimized (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but our models scan over layers/microbatches/chunks — the reported FLOPs
+would undercount a 88-layer model by ~88x.  XLA's optimized HLO annotates
+loops with ``backend_config={"known_trip_count":{"n":...}}``; this module
+parses the module text, walks the computation graph from ENTRY, and
+multiplies every op by the product of enclosing trip counts.
+
+Counted (per device — shapes in partitioned HLO are per-device local):
+  * flops            — dot (2*M*N*K from contracting dims), convolution,
+                       and 1 flop/element for elementwise/reduce ops.
+  * hbm_bytes        — operand+result bytes of *top-level* ops per
+                       computation (fusion internals excluded — matches the
+                       "bytes accessed" fusion-boundary semantics).
+  * collective_bytes — per collective op, link-traffic estimate:
+        all-reduce        2*(g-1)/g * result
+        all-gather        (g-1)/g * result      (result = gathered)
+        reduce-scatter    (g-1)   * result      (operand = g * result)
+        all-to-all        (g-1)/g * result
+        collective-permute result
+    with g = replica-group size.  Totals are also broken out by op kind.
+
+Approximations (documented in EXPERIMENTS.md §Roofline): ``conditional``
+branches are weighted 1/n_branches (our only conditionals are the causal
+block-skip in chunked attention, where the expected execution fraction is
+~0.5); CPU-backend fusion boundaries stand in for TPU fusion when
+estimating HBM traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "rsqrt", "sqrt", "tanh", "logistic",
+    "power", "and", "or", "xor", "not", "compare", "select", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "cosine", "sine", "atan2", "remainder", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "expm1", "log1p",
+    "cbrt", "erf",
+}
+
+_REDUCE_LIKE = {"reduce", "reduce-window"}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# tuple types may contain /*index=N*/ comments; shapes never nest parens,
+# so a flat paren group is the right tuple-type matcher.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^()]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s+([\w\-]+)\((.*)$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string like 'f32[4,64,64]{2,1,0}' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str       # text after the '(' of the operand list
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: '%name (args) -> type {' or 'ENTRY %name ...{'
+        if (stripped.endswith("{") and ("(" in stripped)
+                and "=" not in stripped.split("(")[0]):
+            header = stripped
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", header)
+            if m:
+                current = Computation(m.group(1), [])
+                comps[current.name] = current
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            current.ops.append(Op(name=m.group(1), shape=m.group(2),
+                                  opcode=m.group(3), rest=m.group(4),
+                                  line=stripped))
+    return comps
+
+
+def _called_computations(op: Op) -> List[str]:
+    names = []
+    for attr in ("body", "condition", "calls", "to_apply",
+                 "branch_computations"):
+        m = re.search(attr + r"=\{?([^,}]+(?:,\s*%[\w.\-]+)*)\}?", op.line)
+        if m:
+            for n in m.group(1).split(","):
+                n = n.strip().lstrip("%")
+                if n:
+                    names.append(n)
+    return names
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'known_trip_count.*?"n"\s*:\s*"?(\d+)', op.line)
+    return int(m.group(1)) if m else 1
+
+
+def _group_size(op: Op, total_devices: int) -> int:
+    # iota form: replica_groups=[G,N]<=[...]
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", op.line)
+    if m:
+        return int(m.group(2))
+    # explicit form: replica_groups={{0,1,2},{...}}
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", op.line)
+    if m:
+        return len(m.group(1).split(","))
+    # collective-permute has source_target_pairs instead
+    if op.opcode == "collective-permute":
+        return 2
+    return total_devices
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(op.shape)
+    # contraction size from lhs operand dims + lhs_contracting_dims
+    ops_m = re.findall(r"%([\w.\-]+)", op.rest)
+    if not ops_m:
+        return 0.0
+    lhs_shape = shapes.get(ops_m[0], "")
+    dims = _shape_dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    k = 1
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d and int(d) < len(dims):
+                k *= dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    out_elems = _shape_elems(op.shape)
+    ops_m = re.findall(r"%([\w.\-]+)", op.rest)
+    if len(ops_m) < 2:
+        return 0.0
+    kdims = _shape_dims(shapes.get(ops_m[1], ""))
+    k = 1
+    for d in kdims[:-1]:  # kh*kw*cin (HWIO)
+        k *= d
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # lower bound: each top-level result written once + read once, entry
+    # parameters read once — what a perfectly-fused TPU schedule would
+    # move.  True traffic lies in [hbm_bytes_lower, hbm_bytes]: the upper
+    # bound re-counts every operand at CPU fusion boundaries, which are
+    # finer than TPU's.
+    hbm_bytes_lower: float = 0.0
+    collective_bytes: float = 0.0
+    # TPU-expected width: every >=1MiB fp32 collective in this program is a
+    # CPU float-normalization shadow of a bf16 value (params/activations
+    # are bf16; fp32 appears around dots on CPU only), so it is counted at
+    # half width here.  Small fp32 collectives (loss logsumexp, router
+    # stats, flash-decode merges) are genuinely fp32 and counted raw.
+    collective_bytes_bf16eq: float = 0.0
+    collective_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_ops: int = 0
+    # top contributors by source op (jax op_name metadata), for the §Perf
+    # hillclimb "profile": name -> [flops, bytes, collective_bytes]
+    by_source: Dict[str, list] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0.0, 0.0, 0.0]))
+
+    def top(self, metric: int = 0, k: int = 12) -> List[Tuple[str, list]]:
+        return sorted(self.by_source.items(), key=lambda kv: -kv[1][metric])[:k]
+
+    def as_dict(self, top_k: int = 16) -> dict:
+        def fmt(items):
+            return {name: {"flops": v[0], "bytes": v[1], "coll": v[2]}
+                    for name, v in items}
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "hbm_bytes_lower": self.hbm_bytes_lower,
+                "collective_bytes": self.collective_bytes,
+                "collective_bytes_bf16eq": self.collective_bytes_bf16eq,
+                "collective_by_kind": dict(self.collective_by_kind),
+                "collective_ops": self.collective_ops,
+                "top_flops": fmt(self.top(0, top_k)),
+                "top_bytes": fmt(self.top(1, top_k)),
+                "top_coll": fmt(self.top(2, top_k))}
+
+
+_SRC_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _source_key(op: "Op") -> str:
+    """Aggregation key from jax metadata: strip loop/call path prefixes and
+    uniquifying suffixes so e.g. every layer's attention einsum folds into
+    one bucket."""
+    m = _SRC_RE.search(op.line)
+    if not m:
+        return f"<{op.opcode}>"
+    name = m.group(1)
+    # keep the trailing 2 path segments (module/op), drop jit()/while wrappers
+    parts = [p for p in name.split("/")
+             if not p.startswith(("jit(", "while", "body", "cond",
+                                  "closed_call", "jvp(", "transpose(",
+                                  "rematted", "checkpoint"))]
+    return "/".join(parts[-2:]) if parts else name.split("/")[-1]
+
+
+def analyze_hlo(text: str, total_devices: int,
+                entry: Optional[str] = None) -> HloStats:
+    comps = parse_hlo(text)
+    if not comps:
+        return HloStats()
+    # shape table across all computations (names are globally unique)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.shape
+    # entry computation: the one named in 'ENTRY' (parse separately)
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry_name = m.group(1) if m else next(iter(comps))
+
+    stats = HloStats()
+    fusion_member: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for c in _called_computations(op):
+                    fusion_member.add(c)
+
+    # computations whose root is a dynamic-update-slice: a fusion calling
+    # one writes only the update slice (TPU: in-place on the aliased
+    # buffer), so its traffic is 2x the update operand, not 2x the full
+    # buffer (which charged a whole cache/ys stack per one-slot write).
+    dus_update_bytes: Dict[str, int] = {}
+    for name, comp in comps.items():
+        if not comp.ops:
+            continue
+        root = comp.ops[-1]
+        if root.opcode == "dynamic-update-slice":
+            ops_m = re.findall(r"%([\w.\-]+)", root.rest.split(")")[0])
+            if len(ops_m) > 1:
+                dus_update_bytes[name] = _shape_bytes(
+                    shapes.get(ops_m[1], ""))
+
+    visited_stack: List[str] = []
+
+    def walk(comp_name: str, mult: float, top_level: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in visited_stack:
+            return
+        visited_stack.append(comp_name)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                tc = _trip_count(op)
+                called = _called_computations(op)
+                for c in called:
+                    walk(c, mult * tc, True)
+                if top_level:
+                    stats.hbm_bytes += 0  # while itself moves no data
+                continue
+            if oc == "conditional":
+                called = _called_computations(op)
+                frac = 1.0 / max(len(called), 1)
+                for c in called:
+                    walk(c, mult * frac, True)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                called = _called_computations(op)
+                for c in called:
+                    # fusion internals: count flops, not bytes
+                    walk(c, mult, False)
+                if top_level:
+                    dus = [dus_update_bytes[c] for c in called
+                           if c in dus_update_bytes]
+                    if dus:  # in-place slice write: 2x update bytes
+                        io = lo = 2.0 * mult * dus[0]
+                    else:
+                        io = mult * _op_io_bytes(op, shapes)
+                        lo = 2.0 * mult * _shape_bytes(op.shape)
+                    stats.hbm_bytes += io
+                    stats.hbm_bytes_lower += lo
+                    stats.by_source[_source_key(op)][1] += io
+                continue
+            if oc in COLLECTIVES or oc.rstrip("-start") in COLLECTIVES \
+                    or oc.replace("-start", "") in COLLECTIVES:
+                base = oc.replace("-start", "")
+                if base not in COLLECTIVES:
+                    continue
+                g = _group_size(op, total_devices)
+                rb = _shape_bytes(op.shape)
+                if base == "all-reduce":
+                    moved = 2.0 * (g - 1) / g * rb
+                elif base == "all-gather":
+                    moved = (g - 1) / g * rb
+                elif base == "reduce-scatter":
+                    moved = float(g - 1) * rb
+                elif base == "all-to-all":
+                    moved = (g - 1) / g * rb
+                else:  # collective-permute
+                    moved = float(rb)
+                stats.collective_bytes += mult * moved
+                eq = moved
+                if op.shape.startswith("f32") and rb >= (1 << 20):
+                    eq = moved / 2.0
+                stats.collective_bytes_bf16eq += mult * eq
+                stats.collective_by_kind[base] += mult * moved
+                stats.collective_ops += int(mult) if mult >= 1 else 1
+                stats.by_source[_source_key(op)][2] += mult * moved
+                if top_level:
+                    io = mult * _op_io_bytes(op, shapes)
+                    stats.hbm_bytes += io
+                    stats.hbm_bytes_lower += 2.0 * mult * _shape_bytes(op.shape)
+                    stats.by_source[_source_key(op)][1] += io
+                continue
+            # flops
+            f = 0.0
+            if oc == "dot":
+                f = mult * _dot_flops(op, shapes)
+            elif oc == "convolution":
+                f = mult * _conv_flops(op, shapes)
+            elif oc in _ELEMENTWISE or oc in _REDUCE_LIKE:
+                f = mult * _shape_elems(op.shape)
+            if f:
+                stats.flops += f
+                stats.by_source[_source_key(op)][0] += f
+            if top_level and oc not in ("parameter", "constant", "tuple",
+                                        "get-tuple-element", "bitcast"):
+                io = mult * _op_io_bytes(op, shapes)
+                stats.hbm_bytes += io
+                stats.hbm_bytes_lower += mult * _op_lower_bytes(op, shapes)
+                stats.by_source[_source_key(op)][1] += io
+        visited_stack.pop()
+
+    def _op_io_bytes(op: Op, shapes: Dict[str, str]) -> float:
+        # slicing ops touch only the slice: TPU dynamic-update-slice is
+        # in-place on the aliased buffer (2x update bytes); dynamic-slice
+        # reads+writes the slice.  Counting the full operand charges a
+        # (L, B, S, ...) cache stack per single-slot write — 14.8 TB of
+        # phantom traffic measured on zamba2 train_4k.
+        if op.opcode == "dynamic-update-slice":
+            ops_m = re.findall(r"%([\w.\-]+)", op.rest.split(")")[0])
+            upd = _shape_bytes(shapes.get(ops_m[1], "")) if len(ops_m) > 1 \
+                else _shape_bytes(op.shape)
+            return 2.0 * upd
+        if op.opcode in ("dynamic-slice", "slice"):
+            return 2.0 * _shape_bytes(op.shape)
+        b = float(_shape_bytes(op.shape))
+        for name in re.findall(r"%([\w.\-]+)", op.rest.split(")")[0]):
+            b += _shape_bytes(shapes.get(name, ""))
+        return b
+
+    def _op_lower_bytes(op: Op, shapes: Dict[str, str]) -> float:
+        if op.opcode in ("dynamic-update-slice", "dynamic-slice", "slice"):
+            return _op_io_bytes(op, shapes)
+        return 2.0 * _shape_bytes(op.shape)
+
+    walk(entry_name, 1.0, True)
+    return stats
+
+
+def cpu_bf16_artifact_bytes(text: str, min_bytes: int = 1 << 28) -> int:
+    """Bytes of large fp32 buffers created by XLA *CPU* float-normalization
+    of bf16 ops (bf16 dot / dynamic-update-slice are computed via
+    convert->f32 op->convert on CPU; both are native on TPU, where these
+    buffers do not exist).  Detected as top-level ``convert`` ops — or
+    kLoop fusions wrapping a single convert — producing an fp32 result of
+    >= min_bytes from a bf16 operand.  ``dryrun`` reports
+    ``peak_bytes_per_device - artifact`` as the TPU-corrected peak
+    (micro-repro + discussion: EXPERIMENTS.md §Dry-run)."""
+    comps = parse_hlo(text)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.shape
+    # computations that are just a wrapped convert
+    wrapped = set()
+    for name, comp in comps.items():
+        converts = [o for o in comp.ops if o.opcode == "convert"]
+        if len(converts) == 1 and converts[0].shape.startswith("f32") \
+                and len([o for o in comp.ops
+                         if o.opcode not in ("parameter",)]) == 1:
+            wrapped.add(name)
+    total = 0
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+    entry = m.group(1) if m else next(iter(comps))
+    # walk entry + while bodies (top-level program points)
+    seen_ops = set()
+
+    def visit(comp_name):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return 0
+        t = 0
+        for op in comp.ops:
+            if op.name in seen_ops:
+                continue
+            if op.opcode == "while":
+                for c in _called_computations(op):
+                    t += visit(c)
+                continue
+            is_conv = op.opcode == "convert" and op.shape.startswith("f32")
+            is_wrapped = (op.opcode == "fusion"
+                          and any(c in wrapped
+                                  for c in _called_computations(op)))
+            if not (is_conv or is_wrapped):
+                continue
+            b = _shape_bytes(op.shape)
+            if b < min_bytes:
+                continue
+            ops_m = re.findall(r"%([\w.\-]+)", op.rest)
+            if ops_m and shapes.get(ops_m[0], "").startswith("bf16"):
+                seen_ops.add(op.name)
+                t += b
+        return t
+
+    total = visit(entry)
+    return total

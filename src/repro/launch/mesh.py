@@ -1,0 +1,24 @@
+"""Production mesh construction (task spec).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets XLA_FLAGS before any jax import.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Reduced mesh for in-CI validation of the dry-run machinery."""
+    shape = (2, 2, 4) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))

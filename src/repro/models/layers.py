@@ -1,0 +1,542 @@
+"""Shared LM layers: norms, RoPE, GQA attention (chunked online-softmax),
+SwiGLU, embeddings, and the vocab-sharded cross-entropy loss.
+
+Sharding convention: every activation/parameter is annotated with *logical*
+axis names; an ``AxisRules`` mapping (logical -> mesh axes) turns them into
+``PartitionSpec``s.  The dry-run / hillclimb change shardings by swapping
+rules, never by touching model code (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding rules
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Maps logical axis names to mesh axis names (or None = replicated)."""
+    rules: Mapping[str, Any]
+    mesh: Optional[jax.sharding.Mesh] = None
+    enabled: bool = True
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.rules.get(a) if a is not None else None
+                   for a in logical))
+
+    def constrain(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        if not self.enabled or self.mesh is None:
+            return x
+        return lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, self.spec(*logical)))
+
+
+NO_RULES = AxisRules(rules={}, mesh=None, enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(params: Mapping[str, jax.Array], x: jax.Array,
+               norm_type: str) -> jax.Array:
+    if norm_type == "rms":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def init_norm(d: int, norm_type: str) -> dict:
+    if norm_type == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                       # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / SwiGLU
+# ---------------------------------------------------------------------------
+
+def init_linear(key, din: int, dout: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (din, dout), jnp.float32)
+            / jnp.sqrt(din)).astype(dtype)
+
+
+def swiglu(params: Mapping[str, jax.Array], x: jax.Array,
+           rules: AxisRules = NO_RULES) -> jax.Array:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = rules.constrain(h, "batch", "seq", "ff")
+    return h @ params["w_down"]
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": init_linear(k1, d_model, d_ff, dtype),
+            "w_up": init_linear(k2, d_model, d_ff, dtype),
+            "w_down": init_linear(k3, d_ff, d_model, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, RoPE, chunked online-softmax for long context)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+                   dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d_model, n_heads * d_head, dtype),
+        "wk": init_linear(k2, d_model, n_kv * d_head, dtype),
+        "wv": init_linear(k3, d_model, n_kv * d_head, dtype),
+        "wo": init_linear(k4, n_heads * d_head, d_model, dtype),
+    }
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       causal: bool, chunk: int,
+                       window: Optional[int] = None) -> jax.Array:
+    """Blockwise online-softmax attention (pure JAX; flash-style schedule).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (KV already expanded to H heads).
+    Scans q-chunks (outer) x k-chunks (inner); fully-masked k-chunks are
+    skipped with ``lax.cond`` (runtime skip — the causal lower triangle costs
+    ~half the full sweep).  fp32 accumulation.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / D ** 0.5
+    cq = min(chunk, Sq)
+    ck = min(chunk, Sk)
+    nq, nk = Sq // cq, Sk // ck
+    qc = q.reshape(B, nq, cq, H, D).transpose(1, 0, 3, 2, 4)   # (nq,B,H,cq,D)
+    kc = k.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, ck, H, D).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_and_q):
+        qi, qblk = qi_and_q                                    # (B,H,cq,D)
+        q_start = qi * cq
+
+        def k_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_kv
+            k_start = ki * ck
+
+            def skip():
+                return m, l, acc
+
+            def run():
+                s = jnp.einsum("bhqd,bhkd->bhqk",
+                               qblk.astype(jnp.float32),
+                               kblk.astype(jnp.float32)) * scale
+                rows = q_start + lax.broadcasted_iota(jnp.int32, (cq, ck), 0)
+                cols = k_start + lax.broadcasted_iota(jnp.int32, (cq, ck), 1)
+                mask = jnp.ones((cq, ck), bool)
+                if causal:
+                    mask &= cols <= rows
+                if window is not None:
+                    mask &= cols > rows - window
+                s = jnp.where(mask, s, -1e30)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+                acc_new = acc * alpha + jnp.einsum(
+                    "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
+                return m_new, l_new, acc_new
+
+            pred = jnp.bool_(True)
+            if causal:  # k-chunk entirely in the future -> skip
+                pred &= k_start <= q_start + cq - 1
+            if window is not None:  # k-chunk entirely before the window
+                pred &= k_start + ck - 1 > q_start - window
+            return lax.cond(pred, run, skip), None
+
+        init = (jnp.full((B, H, cq, 1), -1e30, jnp.float32),
+                jnp.zeros((B, H, cq, 1), jnp.float32),
+                jnp.zeros((B, H, cq, D), jnp.float32))
+        (m, l, acc), _ = lax.scan(
+            k_step, init, (jnp.arange(nk), kc, vc))
+        out = acc / jnp.where(l == 0.0, 1.0, l)
+        return None, out
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qc))     # (nq,B,H,cq,D)
+    return outs.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_forward(params: Mapping[str, jax.Array], x: jax.Array,
+                      positions: jax.Array, *, n_heads: int, n_kv: int,
+                      d_head: int, rope_theta: float, causal: bool = True,
+                      window: Optional[int] = None, chunk: int = 1024,
+                      rules: AxisRules = NO_RULES, use_rope: bool = True,
+                      head_axis: str = "heads",
+                      kv_override: Optional[tuple] = None) -> jax.Array:
+    """Full-sequence attention (train / prefill).
+
+    head_axis: the logical axis for the H dim of the attention inner compute
+    — "heads" (head-TP) or "seq_heads_replicated" together with seq sharding
+    (seq-TP, used when n_heads isn't divisible by the model-axis size).
+    kv_override: optional (k, v) in (B, Sk, n_kv, d_head) layout for
+    cross-attention (encoder-decoder); RoPE is skipped for those.
+    Returns (B, S, d_model_out); also returns the pre-expansion (k, v) pair
+    for cache construction via ``attention_forward.last_kv`` convention —
+    instead we return a tuple when ``return_kv``.
+    """
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, d_head)
+    if "q_norm" in params:  # qwen3-style per-head QK norm
+        q = rms_norm(q, params["q_norm"])
+    if kv_override is None:
+        k = (x @ params["wk"]).reshape(B, S, n_kv, d_head)
+        v = (x @ params["wv"]).reshape(B, S, n_kv, d_head)
+        if "k_norm" in params:
+            k = rms_norm(k, params["k_norm"])
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+
+    group = n_heads // n_kv
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+    if head_axis == "heads":
+        q = rules.constrain(q, "batch", "seq", "heads", None)
+        k = rules.constrain(k, "batch", "seq", "heads", None)
+        v = rules.constrain(v, "batch", "seq", "heads", None)
+    else:  # seq-TP: shard the q sequence, replicate KV heads
+        q = rules.constrain(q, "batch", "seq_attn", None, None)
+        k = rules.constrain(k, "batch", None, None, None)
+        v = rules.constrain(v, "batch", None, None, None)
+
+    o = _chunked_attention(q, k, v, causal=causal, chunk=chunk, window=window)
+    o = o.reshape(B, S, n_heads * d_head)
+    return o @ params["wo"]
+
+
+def project_kv(params, x: jax.Array, positions: jax.Array, *, n_kv: int,
+               d_head: int, rope_theta: float, use_rope: bool = True):
+    """K/V projection only (for building caches / cross-attention memory).
+    Applies the optional per-head k_norm (qwen3) before RoPE — the same
+    order attention_forward/attention_decode use, so cache contents match
+    the in-context values."""
+    B, S, _ = x.shape
+    k = (x @ params["wk"]).reshape(B, S, n_kv, d_head)
+    v = (x @ params["wv"]).reshape(B, S, n_kv, d_head)
+    if "k_norm" in params:
+        k = rms_norm(k, params["k_norm"])
+    if use_rope:
+        k = apply_rope(k, positions, rope_theta)
+    return k, v
+
+
+def attention_decode(params: Mapping[str, jax.Array], x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, *, n_heads: int, n_kv: int, d_head: int,
+                     rope_theta: float, rules: AxisRules = NO_RULES,
+                     use_rope: bool = True, window: Optional[int] = None,
+                     update_cache: bool = True, kv_chunk: int = 2048):
+    """Single-token decode against a (B, S_cache, n_kv, d_head) cache.
+
+    The cache's sequence dim carries the logical axis "cache_seq"; with
+    cache_seq -> "model" this is the flash-decoding plan (DESIGN.md §5):
+    every chip holds full heads and a slice of the sequence, and the
+    softmax merge across shards is a tiny (pmax, psum, psum) instead of an
+    all-gathered cache.
+
+    CACHE-WRITE DISCIPLINE: this function never writes the cache.  It
+    returns (out, k_new, v_new) with k_new/v_new (B, 1, n_kv, d_head); the
+    caller stacks them across layers and performs ONE dynamic-update-slice
+    on the stacked cache *outside* the layer scan
+    (``update_cache_stack``).  Writing per-layer inside the scan keeps a
+    full fp32 copy of the stacked cache alive on backends that
+    float-normalize bf16 DUS (XLA CPU: +11.4 GiB/device measured on
+    zamba2-7b long_500k), and costs one DUS per layer instead of one per
+    step.  The new token's attention contribution is folded into the
+    online-softmax merge, so the sweep sees only already-written slots.
+
+    ``update_cache=False`` (cross-attention over a static memory): sweeps
+    slots <= pos inclusively and adds no new-token term.
+    """
+    B = x.shape[0]
+    S = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(B, 1, n_heads, d_head)
+    k_new = (x @ params["wk"]).reshape(B, 1, n_kv, d_head)
+    v_new = (x @ params["wv"]).reshape(B, 1, n_kv, d_head)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k_new = rms_norm(k_new, params["k_norm"])
+    if use_rope:
+        q = apply_rope(q, pos[:, None], rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], rope_theta)
+
+    group = n_heads // n_kv
+    qg = q.reshape(B, n_kv, group, d_head).astype(jnp.float32)
+    scale = 1.0 / d_head ** 0.5
+    rolling = window is not None and S == window
+    include_new = update_cache  # new token not in cache yet -> extra term
+
+    cache_axis = rules.rules.get("cache_seq") if rules.enabled else None
+    if cache_axis is not None and rules.mesh is not None:
+        # Distributed flash-decoding as an explicit shard_map: a plain scan
+        # over chunks of a sharded dim would be a *global* loop under GSPMD
+        # (observed: involuntary full rematerialization + an all-gathered
+        # cache on mistral-large decode_32k).
+        mesh = rules.mesh
+        n_shards = mesh.shape[cache_axis]
+        s_loc = S // n_shards
+        b_axes = rules.rules.get("batch")
+
+        def swept(qg_l, k_l, v_l, pos_l):
+            start = lax.axis_index(cache_axis) * s_loc
+            m, l, acc = _decode_sweep(
+                qg_l, k_l, v_l, pos_l, start, scale=scale, rolling=rolling,
+                s_total=S, kv_chunk=kv_chunk, strict=include_new)
+            m_g = lax.pmax(m, cache_axis)
+            corr = jnp.exp(m - m_g)
+            return m_g, lax.psum(l * corr, cache_axis), \
+                lax.psum(acc * corr, cache_axis)
+
+        m, l, acc = jax.shard_map(
+            swept, mesh=mesh,
+            in_specs=(P(b_axes, None, None, None),
+                      P(b_axes, cache_axis, None, None),
+                      P(b_axes, cache_axis, None, None), P(None)),
+            out_specs=(P(b_axes, None, None, None),) * 3,
+            check_vma=False)(qg, cache_k, cache_v, pos)
+    else:
+        m, l, acc = _decode_sweep(qg, cache_k, cache_v, pos, 0, scale=scale,
+                                  rolling=rolling, s_total=S,
+                                  kv_chunk=kv_chunk, strict=include_new)
+    if include_new:
+        # fold in the just-computed token (slot pos, not yet in the cache)
+        s_new = jnp.einsum("bkgd,bkd->bkg", qg,
+                           k_new[:, 0].astype(jnp.float32))[..., None] * scale
+        m_f = jnp.maximum(m, s_new)
+        p_new = jnp.exp(s_new - m_f)
+        alpha = jnp.exp(m - m_f)
+        l = alpha * l + p_new
+        acc = acc * alpha + p_new * v_new[:, 0, :, None, :].astype(jnp.float32)
+    o = acc / jnp.where(l == 0.0, 1.0, l)
+    o = o.reshape(B, 1, n_heads * d_head).astype(x.dtype)
+    return o @ params["wo"], k_new.astype(cache_k.dtype), \
+        v_new.astype(cache_v.dtype)
+
+
+def update_cache_stack(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                       window: Optional[int] = None,
+                       rules: AxisRules = NO_RULES) -> jax.Array:
+    """Write a stacked (L, B, 1, n_kv, d) slab of new K or V vectors into a
+    (L, B, S, n_kv, d) stacked cache at slot ``pos`` — one DUS per decode
+    step, outside the layer scan (see attention_decode).
+
+    bf16 caches are updated through a uint16 bitcast view: XLA's CPU
+    float-normalization pass rewrites *bf16* DUS as
+    convert(f32)->DUS->convert, which materializes two fp32 copies of the
+    entire stacked cache (+11.4 GiB/device measured on zamba2-7b
+    long_500k); integer DUS is left alone, and the bitcast is free on TPU.
+    Bit-exact by construction.
+    """
+    S = cache.shape[2]
+    slot = pos[0] % window if (window is not None and S == window) else pos[0]
+    new = new.astype(cache.dtype)
+    if cache.dtype == jnp.bfloat16:
+        out = lax.bitcast_convert_type(
+            lax.dynamic_update_slice_in_dim(
+                lax.bitcast_convert_type(cache, jnp.uint16),
+                lax.bitcast_convert_type(new, jnp.uint16), slot, axis=2),
+            jnp.bfloat16)
+    else:
+        out = lax.dynamic_update_slice_in_dim(cache, new, slot, axis=2)
+    return rules.constrain(out, None, "batch", "cache_seq", None, None)
+
+
+def _decode_sweep(qg: jax.Array, kloc: jax.Array, vloc: jax.Array,
+                  pos: jax.Array, start, *, scale: float, rolling: bool,
+                  s_total: int, kv_chunk: int, strict: bool = True):
+    """Online-softmax sweep of a (local) cache slice.
+
+    qg: (B, n_kv, group, d); kloc/vloc: (B, S_loc, n_kv, d); start: global
+    index of slot 0.  Chunking bounds the fp32 working set to one kv_chunk
+    slab.  ``strict``: mask slot ``pos`` itself (deferred cache write — the
+    current token's term is merged by the caller); False sweeps <= pos
+    (static cross-attention memory).  Returns running (m, l, acc).
+    """
+    B, n_kv, group, d_head = qg.shape
+    S_loc = kloc.shape[1]
+    ck = min(kv_chunk, S_loc)
+    while S_loc % ck:
+        ck -= 1
+    nch = S_loc // ck
+    kc = kloc.reshape(B, nch, ck, n_kv, d_head).swapaxes(0, 1)
+    vc = vloc.reshape(B, nch, ck, n_kv, d_head).swapaxes(0, 1)
+
+    qg_c = qg.astype(kloc.dtype)
+
+    def chunk_step(carry, ins):
+        m, l, acc = carry
+        ci, kblk, vblk = ins                       # (B, ck, n_kv, d)
+        # native-dtype dots with fp32 accumulation: an explicit fp32 cast of
+        # the chunk gets commuted across the slice by XLA and hoisted into a
+        # full-cache fp32 convert (CPU float-normalization; EXPERIMENTS.md)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg_c, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        idx = start + ci * ck + jnp.arange(ck)
+        if rolling:
+            # window wrapped: all slots valid except the stale slot being
+            # overwritten this step (it holds position pos-window, outside
+            # the window); before wrapping, strictly-older slots only.
+            wrapped = pos[0] + 1 >= s_total
+            stale = idx == (pos[0] % s_total)
+            valid = jnp.where(wrapped, ~stale, idx < pos[0])
+        elif strict:  # slot pos not yet written (deferred update)
+            valid = idx < pos[0]
+        else:         # static memory: everything up to pos inclusive
+            valid = idx <= pos[0]
+        s = jnp.where(valid[None, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.einsum(
+            "bkgs,bskd->bkgd", p.astype(vloc.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, n_kv, group, 1), -1e30, jnp.float32),
+            jnp.zeros((B, n_kv, group, 1), jnp.float32),
+            jnp.zeros((B, n_kv, group, d_head), jnp.float32))
+    (m, l, acc), _ = lax.scan(chunk_step, init, (jnp.arange(nch), kc, vc))
+    return m, l, acc
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"tok": (jax.random.normal(k1, (vocab, d_model), jnp.float32)
+                    * 0.02).astype(dtype),
+            "out": init_linear(k2, d_model, vocab, dtype)}
+
+
+def embed(params, tokens: jax.Array, rules: AxisRules = NO_RULES) -> jax.Array:
+    """Token embedding lookup; the table is d_model-sharded so the gather is
+    collective-free (DESIGN.md §5)."""
+    e = jnp.take(params["tok"], tokens, axis=0)
+    return rules.constrain(e, "batch", "seq_res", "embed_act")
+
+
+def unembed(params, x: jax.Array, rules: AxisRules = NO_RULES) -> jax.Array:
+    logits = x @ params["out"]
+    return rules.constrain(logits, "batch", "seq", "vocab")
+
+
+def _pmax_nograd(x: jax.Array, axis_name: str) -> jax.Array:
+    """Cross-shard max treated as a constant under differentiation."""
+
+    @jax.custom_jvp
+    def f(v):
+        return lax.pmax(v, axis_name)
+
+    @f.defjvp
+    def f_jvp(primals, tangents):
+        (v,) = primals
+        return f(v), jnp.zeros_like(v)
+
+    return f(x)
+
+
+def sharded_softmax_xent(logits: jax.Array, labels: jax.Array,
+                         mesh: Optional[jax.sharding.Mesh],
+                         vocab_axis: Optional[str],
+                         batch_spec: P = P()) -> jax.Array:
+    """Cross-entropy with the vocab dim sharded over ``vocab_axis``.
+
+    Computed in shard_map: per-shard logsumexp + in-range label gather +
+    psum — no (B,S,V) one-hot, no cross-shard logit gather (DESIGN.md §5).
+    logits: (B, S, V) sharded P(batch_spec..., vocab_axis); labels: (B, S).
+    Returns per-token loss (B, S) (sharded like labels).
+    """
+    if mesh is None or vocab_axis is None:
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+        return lse - ll
+
+    v_global = logits.shape[-1]
+    n_shards = mesh.shape[vocab_axis]
+    v_local = v_global // n_shards
+
+    def local_loss(lg, lb):
+        # lg: (b, S, v_local) local block; lb: (b, S)
+        lg = lg.astype(jnp.float32)
+        shard = lax.axis_index(vocab_axis)
+        # stability max: its gradient contributions cancel exactly, so a
+        # zero-tangent custom_jvp is exact (pmax has no built-in AD rule).
+        m = _pmax_nograd(jnp.max(lg, axis=-1), vocab_axis)          # (b,S)
+        se = lax.psum(jnp.sum(jnp.exp(lg - m[..., None]), axis=-1),
+                      vocab_axis)
+        lse = jnp.log(se) + m
+        local_idx = lb - shard * v_local
+        in_range = (local_idx >= 0) & (local_idx < v_local)
+        safe = jnp.clip(local_idx, 0, v_local - 1)
+        ll_local = jnp.take_along_axis(lg, safe[..., None], axis=-1)[..., 0]
+        ll = lax.psum(jnp.where(in_range, ll_local, 0.0), vocab_axis)
+        return lse - ll
+
+    bdims = tuple(batch_spec)
+    in_specs = (P(*bdims, None, vocab_axis), P(*bdims, None))
+    out_specs = P(*bdims, None)
+    return jax.shard_map(local_loss, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)(logits, labels)

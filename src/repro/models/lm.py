@@ -1,0 +1,772 @@
+"""Config-driven LM family: dense / MoE / SSM / hybrid / VLM / enc-dec.
+
+One implementation covers all 10 assigned architectures (DESIGN.md §4):
+layers are stacked pytrees scanned with ``lax.scan`` (bounded HLO — required
+for the 40-cell dry-run compile budget), remat via ``jax.checkpoint`` around
+the layer body, logical-axis sharding constraints throughout (layers.AxisRules).
+
+Entry points:
+  init_params(cfg, key)                     -> params pytree
+  param_logical_axes(cfg)                   -> matching pytree of logical axes
+  forward_train(params, cfg, batch, rules)  -> logits (+ moe aux)
+  loss_fn(params, cfg, batch, rules)        -> (scalar loss, metrics)
+  init_decode_state / prefill / decode_step -> serving path with KV/SSM caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import AxisRules, NO_RULES
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv: int = 0
+    d_head: int = 0
+    d_ff: int = 0
+    norm_type: str = "rms"
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None
+    moe: Optional[moe_lib.MoEConfig] = None
+    ssm: Optional[ssm_lib.SSMConfig] = None
+    attn_every: int = 0              # hybrid: shared attn after every N ssm layers
+    n_img_tokens: int = 0            # vlm stub frontend
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    attn_plan: str = "head_tp"       # head_tp | seq_tp (DESIGN.md §5)
+    attn_chunk: int = 1024
+    ssm_chunk: int = 64
+    remat: bool = True
+    dtype: Any = jnp.bfloat16
+    vocab_pad_to: int = 256
+    source_len: int = 0              # enc-dec: encoder frames (0 = same as S)
+
+    @property
+    def vocab_padded(self) -> int:
+        p = self.vocab_pad_to
+        return (self.vocab + p - 1) // p * p
+
+    @property
+    def block_kind(self) -> str:
+        if self.family in ("dense", "vlm"):
+            return "attn_mlp"
+        if self.family == "moe":
+            return "attn_moe"
+        if self.family == "ssm":
+            return "ssm"
+        if self.family == "hybrid":
+            return "hybrid"
+        if self.family == "audio":
+            return "attn_mlp"
+        raise ValueError(self.family)
+
+    def param_count(self) -> int:
+        """Total parameters (for MODEL_FLOPS / roofline).  Computed with
+        Python ints — jnp.prod on >2e9-element shapes overflows int32."""
+        import math
+        c = jax.eval_shape(lambda k: init_params(self, k),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(math.prod(x.shape) for x in jax.tree.leaves(c))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        moe_per_layer = 3 * self.moe.d_ff * self.d_model * e
+        n_moe = self.n_layers
+        moe_total = moe_per_layer * n_moe
+        return total - moe_total + moe_total * k // e
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ArchConfig, with_mlp: bool = True,
+                     with_moe: bool = False, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {
+        "attn_norm": L.init_norm(cfg.d_model, cfg.norm_type),
+        "attn": L.init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                 cfg.d_head, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["attn"]["q_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+        p["attn"]["k_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+    if cross:
+        p["cross_norm"] = L.init_norm(cfg.d_model, cfg.norm_type)
+        p["cross"] = L.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv, cfg.d_head, cfg.dtype)
+    if with_moe:
+        p["mlp_norm"] = L.init_norm(cfg.d_model, cfg.norm_type)
+        p["moe"] = moe_lib.init_moe(ks[2], cfg.moe, cfg.dtype)
+    elif with_mlp:
+        p["mlp_norm"] = L.init_norm(cfg.d_model, cfg.norm_type)
+        p["mlp"] = L.init_swiglu(ks[3], cfg.d_model, cfg.d_ff, cfg.dtype)
+    return p
+
+
+def _init_ssm_block(key, cfg: ArchConfig) -> dict:
+    return {"norm": L.init_norm(cfg.d_model, cfg.norm_type),
+            "mamba": ssm_lib.init_mamba(key, cfg.ssm, cfg.dtype)}
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(ks[0], cfg.vocab_padded, cfg.d_model,
+                                  cfg.dtype),
+        "final_norm": L.init_norm(cfg.d_model, cfg.norm_type),
+    }
+    kind = cfg.block_kind
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_super * cfg.attn_every
+        params["blocks"] = _stack_init(
+            lambda k: _stack_init(lambda k2: _init_ssm_block(k2, cfg),
+                                  k, cfg.attn_every), ks[1], n_super)
+        params["shared_attn"] = _init_attn_block(ks[2], cfg, with_mlp=True)
+        if tail:
+            params["tail"] = _stack_init(
+                lambda k: _init_ssm_block(k, cfg), ks[3], tail)
+    elif kind == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: _init_ssm_block(k, cfg), ks[1], cfg.n_layers)
+    else:
+        with_moe = kind == "attn_moe"
+        params["layers"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, with_moe=with_moe), ks[1],
+            cfg.n_layers)
+    if cfg.enc_dec:
+        params["encoder"] = {
+            "layers": _stack_init(
+                lambda k: _init_attn_block(k, cfg), ks[4], cfg.n_enc_layers),
+            "final_norm": L.init_norm(cfg.d_model, cfg.norm_type),
+        }
+        # decoder layers get cross-attention
+        params["layers"] = _stack_init(
+            lambda k: _init_attn_block(k, cfg, cross=True), ks[5],
+            cfg.n_layers)
+    if cfg.family == "vlm":
+        ks2 = jax.random.split(ks[6])
+        params["img_proj"] = L.init_linear(ks2[0], cfg.d_model, cfg.d_model,
+                                           cfg.dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Logical axes for every parameter (drives PartitionSpecs)
+# ---------------------------------------------------------------------------
+
+_PARAM_AXES = {
+    # name suffix -> logical axes (leading "layers" added for stacked params)
+    "embed/tok": ("vocab_table", "embed_model"),
+    "embed/out": (None, "vocab"),
+    "attn/wq": ("embed", "qkv_out"),
+    "attn/wk": ("embed", "qkv_out"),
+    "attn/wv": ("embed", "qkv_out"),
+    "attn/wo": ("qkv_out", "embed"),
+    "attn/q_norm": (None,),
+    "attn/k_norm": (None,),
+    "cross/wq": ("embed", "qkv_out"),
+    "cross/wk": ("embed", "qkv_out"),
+    "cross/wv": ("embed", "qkv_out"),
+    "cross/wo": ("qkv_out", "embed"),
+    "mlp/w_gate": ("embed", "ff"),
+    "mlp/w_up": ("embed", "ff"),
+    "mlp/w_down": ("ff", "embed"),
+    "moe/router": (None, None),
+    "moe/w_gate": ("experts", "embed", None),
+    "moe/w_up": ("experts", "embed", None),
+    "moe/w_down": ("experts", None, "embed"),
+    "mamba/in_proj": ("embed", "ssm_proj"),
+    "mamba/conv_w": (None, "ssm_inner"),
+    "mamba/conv_b": ("ssm_inner",),
+    "mamba/out_proj": ("ssm_inner", "embed"),
+    "mamba/x_proj": ("ssm_inner", None),
+    "mamba/dt_proj": (None, "ssm_inner"),
+    "mamba/dt_bias": ("ssm_inner",),
+    "mamba/A_log": ("ssm_inner", None),
+    "mamba/D": ("ssm_inner",),
+    "mamba/bc_proj": ("ssm_inner", None),
+    # mamba2 per-head vectors (distinct names; tiny -> replicated)
+    "mamba/dt_head_proj": ("ssm_inner", None),
+    "mamba/dt_head_bias": (None,),
+    "mamba/a_log_h": (None,),
+    "mamba/d_h": (None,),
+    "img_proj": ("embed", None),
+}
+
+
+def param_logical_axes(cfg: ArchConfig):
+    """Pytree (matching init_params) of logical-axis tuples."""
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def axes_for(path, leaf):
+        keys = [getattr(p, "key", str(p)) for p in path]
+        n_stack = leaf.ndim
+        # match the trailing "<module>/<param>" of the path
+        for i in range(len(keys) - 1):
+            cand = f"{keys[i]}/{keys[i + 1]}"
+            if cand in _PARAM_AXES:
+                ax = _PARAM_AXES[cand]
+                lead = (None,) * (leaf.ndim - len(ax))
+                return lead + ax
+        if keys and keys[-1] in _PARAM_AXES:
+            ax = _PARAM_AXES[keys[-1]]
+            lead = (None,) * (leaf.ndim - len(ax))
+            return lead + ax
+        return (None,) * leaf.ndim  # norms, biases
+
+    return jax.tree_util.tree_map_with_path(axes_for, params)
+
+
+def param_shardings(cfg: ArchConfig, rules: AxisRules):
+    axes = param_logical_axes(cfg)
+    mesh = rules.mesh
+
+    def to_sharding(ax):
+        return jax.sharding.NamedSharding(mesh, rules.spec(*ax))
+
+    return jax.tree.map(to_sharding, axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _attn_block_fwd(p, x, positions, cfg: ArchConfig, rules: AxisRules, *,
+                    causal=True, memory=None, mode="train"):
+    """Attention (+cross) (+mlp|moe) block.  Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(p["attn_norm"], x, cfg.norm_type)
+    attn_out = L.attention_forward(
+        p["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+        d_head=cfg.d_head, rope_theta=cfg.rope_theta, causal=causal,
+        window=cfg.sliding_window if causal else None, chunk=cfg.attn_chunk,
+        rules=rules,
+        head_axis="heads" if cfg.attn_plan == "head_tp" else "seq")
+    # constraining the partial-sum projection output itself (not just the
+    # residual) lets GSPMD lower the TP combine as a reduce-scatter rather
+    # than all-reduce + slice (§Perf iteration 3)
+    attn_out = rules.constrain(attn_out, "batch", "seq_res", "embed_act")
+    x = x + attn_out
+    if memory is not None:
+        hc = L.apply_norm(p["cross_norm"], x, cfg.norm_type)
+        mem_k, mem_v = memory
+        cross_out = L.attention_forward(
+            p["cross"], hc, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta, causal=False,
+            chunk=cfg.attn_chunk, rules=rules, use_rope=False,
+            kv_override=(mem_k, mem_v),
+            head_axis="heads" if cfg.attn_plan == "head_tp" else "seq")
+        x = x + cross_out
+    hm = L.apply_norm(p["mlp_norm"], x, cfg.norm_type)
+    if "moe" in p:
+        y, aux = moe_lib.moe_forward(p["moe"], hm, cfg.moe, rules=rules)
+    else:
+        y = L.swiglu(p["mlp"], hm, rules)
+    y = rules.constrain(y, "batch", "seq_res", "embed_act")
+    x = x + y
+    return rules.constrain(x, "batch", "seq_res", "embed_act"), aux
+
+
+def _ssm_block_fwd(p, x, cfg: ArchConfig, rules: AxisRules,
+                   state: Optional[ssm_lib.SSMState] = None):
+    h = L.apply_norm(p["norm"], x, cfg.norm_type)
+    y, new_state = ssm_lib.mamba_forward(p["mamba"], h, cfg.ssm,
+                                         chunk=cfg.ssm_chunk, rules=rules,
+                                         state=state)
+    return rules.constrain(x + y, "batch", "seq_res", "embed_act"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill backbone)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _remat_group(n: int) -> int:
+    """Divisor of n nearest sqrt(n) — the two-level remat group size.
+
+    Single-level remat over an L-layer scan keeps L copies of the layer
+    input alive for the backward; nesting the scan as (L/G outer) x (G
+    inner) with jax.checkpoint at both levels keeps only L/G + G copies,
+    minimized at G ~ sqrt(L) (classic sqrt-remat).  Measured on
+    mistral-large-123b train_4k: 88 residual copies -> 19, 55.6 GiB temp ->
+    within the 16 GiB/device budget (EXPERIMENTS.md §Perf).
+    """
+    best = 1
+    target = n ** 0.5
+    for g in range(1, n + 1):
+        if n % g == 0 and abs(g - target) < abs(best - target):
+            best = g
+    return best
+
+
+def _nested_scan(body, carry, stacked, cfg: ArchConfig):
+    """Scan ``body`` over the leading axis of ``stacked`` with two-level
+    (sqrt) remat when enabled and profitable."""
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    g = _remat_group(n) if cfg.remat else 1
+    if g <= 1 or g >= n:
+        carry, _ = lax.scan(_maybe_remat(body, cfg), carry, stacked)
+        return carry
+
+    grouped = jax.tree.map(
+        lambda a: a.reshape(n // g, g, *a.shape[1:]), stacked)
+
+    def outer(c, group):
+        c, _ = lax.scan(_maybe_remat(body, cfg), c, group)
+        return c, None
+
+    carry, _ = lax.scan(_maybe_remat(outer, cfg), carry, grouped)
+    return carry
+
+
+def _scan_attn_layers(stacked, x, positions, cfg, rules, *, causal=True,
+                      memory=None):
+    def body(carry, lp):
+        xc, aux = carry
+        xn, a = _attn_block_fwd(lp, xc, positions, cfg, rules, causal=causal,
+                                memory=memory)
+        return (xn, aux + a), None
+
+    x, aux = _nested_scan(body, (x, jnp.zeros(())), stacked, cfg)
+    return x, aux
+
+
+def _scan_ssm_layers(stacked, x, cfg, rules):
+    def body(carry, lp):
+        xn, _ = _ssm_block_fwd(lp, carry, cfg, rules)
+        return xn, None
+
+    return _nested_scan(body, x, stacked, cfg)
+
+
+def _hybrid_fwd(params, x, positions, cfg, rules):
+    shared = params["shared_attn"]
+
+    def super_body(carry, blk):
+        xc = _scan_ssm_layers(blk, carry, cfg, rules)
+        xc, _ = _attn_block_fwd(shared, xc, positions, cfg, rules)
+        return xc, None
+
+    x, _ = lax.scan(_maybe_remat(super_body, cfg), x, params["blocks"])
+    if "tail" in params:
+        x = _scan_ssm_layers(params["tail"], x, cfg, rules)
+    return x
+
+
+def backbone_forward(params, cfg: ArchConfig, x: jax.Array,
+                     positions: jax.Array, rules: AxisRules, *,
+                     memory=None):
+    """Run the decoder stack on embedded inputs x: (B,S,D)."""
+    kind = cfg.block_kind
+    aux = jnp.zeros(())
+    if cfg.family == "hybrid":
+        x = _hybrid_fwd(params, x, positions, cfg, rules)
+    elif kind == "ssm":
+        x = _scan_ssm_layers(params["layers"], x, cfg, rules)
+    else:
+        x, aux = _scan_attn_layers(params["layers"], x, positions, cfg,
+                                   rules, memory=memory)
+    return L.apply_norm(params["final_norm"], x, cfg.norm_type), aux
+
+
+def encode(params, cfg: ArchConfig, frames: jax.Array, rules: AxisRules):
+    """Bidirectional encoder over stub frame embeddings (B, T_src, D)."""
+    B, T, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    x = rules.constrain(frames.astype(cfg.dtype), "batch", "seq", "embed_act")
+    x, _ = _scan_attn_layers(params["encoder"]["layers"], x, positions, cfg,
+                             rules, causal=False)
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg.norm_type)
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                  rules: AxisRules):
+    """Token (+image) embedding.  Returns (x (B,S,D), positions (B,S))."""
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, rules)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(cfg.dtype) @ params["img_proj"]
+        img = rules.constrain(img, "batch", "seq", "embed_act")
+        x = jnp.concatenate([img, x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    return x, positions
+
+
+def forward_train(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+                  rules: AxisRules = NO_RULES):
+    """Teacher-forced forward.  Returns (logits (B,S,V), moe aux)."""
+    x, positions = _embed_inputs(params, cfg, batch, rules)
+    # enc-dec: each decoder layer projects the shared encoder memory with its
+    # own cross-attention weights inside the layer scan.
+    memory = encode(params, cfg, batch["frames"], rules) if cfg.enc_dec \
+        else None
+    x, aux = _backbone_with_memory(params, cfg, x, positions, rules, memory)
+    logits = L.unembed(params["embed"], x, rules)
+    return logits, aux
+
+
+def _backbone_with_memory(params, cfg, x, positions, rules, memory):
+    if memory is None:
+        return backbone_forward(params, cfg, x, positions, rules)
+
+    def body(carry, lp):
+        xc, aux = carry
+        mk, mv = L.project_kv(lp["cross"], memory, None, n_kv=cfg.n_kv,
+                              d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                              use_rope=False)
+        xn, a = _attn_block_fwd(lp, xc, positions, cfg, rules,
+                                memory=(mk, mv))
+        return (xn, aux + a), None
+
+    x, aux = _nested_scan(body, (x, jnp.zeros(())), params["layers"], cfg)
+    return L.apply_norm(params["final_norm"], x, cfg.norm_type), aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            rules: AxisRules = NO_RULES, aux_weight: float = 0.01):
+    """Mean CE over labeled tokens (labels < 0 are masked) + MoE aux."""
+    logits, aux = forward_train(params, cfg, batch, rules)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        n_img = batch["image_embeds"].shape[1]
+        pad = -jnp.ones((labels.shape[0], n_img), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    vocab_axis = rules.rules.get("vocab") if rules.enabled else None
+    per_tok = L.sharded_softmax_xent(
+        logits, safe, rules.mesh, vocab_axis,
+        batch_spec=rules.spec("batch"))
+    per_tok = jnp.where(mask, per_tok, 0.0)
+    loss = jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1)
+    total = loss + aux_weight * aux
+    return total, {"ce": loss, "moe_aux": aux,
+                   "tokens": jnp.sum(mask).astype(jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving: decode state, prefill, decode step
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    """Per-layer caches, stacked on the layer axis.
+
+    kv: (k, v) each (L, B, S, n_kv, d_head) — attention caches (or the
+        shared-attn cache (n_super, B, S, ...) for hybrids).
+    ssm: SSMState with leading layer axis — SSM recurrent state.
+    cross: optional (k, v) (L, B, T_src, n_kv, d_head) — enc-dec memory.
+    pos: (B,) next position index.
+    """
+    kv: Optional[tuple]
+    ssm: Optional[ssm_lib.SSMState]
+    cross: Optional[tuple]
+    pos: jax.Array
+
+
+def _cache_len(cfg: ArchConfig, max_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(max_len, cfg.sliding_window)
+    return max_len
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int,
+                      rules: AxisRules = NO_RULES) -> DecodeState:
+    S = _cache_len(cfg, max_len)
+    kv = None
+    ssm_state = None
+    cross = None
+    mk_kv = lambda n: tuple(
+        jnp.zeros((n, batch, S, cfg.n_kv, cfg.d_head), cfg.dtype)
+        for _ in range(2))
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        kv = mk_kv(cfg.n_layers)
+    elif cfg.family == "ssm":
+        ssm_state = ssm_lib.SSMState(
+            conv=jnp.zeros((cfg.n_layers, batch, cfg.ssm.conv_kernel - 1,
+                            cfg.ssm.d_inner), cfg.dtype),
+            ssm=jnp.zeros((cfg.n_layers, batch, cfg.ssm.d_inner,
+                           cfg.ssm.d_state), jnp.float32))
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_super * cfg.attn_every
+        kv = mk_kv(n_super)
+        ssm_state = ssm_lib.SSMState(
+            conv=jnp.zeros((n_super * cfg.attn_every + tail, batch,
+                            cfg.ssm.conv_kernel - 1, cfg.ssm.d_inner),
+                           cfg.dtype),
+            ssm=jnp.zeros((n_super * cfg.attn_every + tail, batch,
+                           cfg.ssm.d_inner, cfg.ssm.d_state), jnp.float32))
+    if cfg.enc_dec:
+        src = cfg.source_len or max_len
+        cross = tuple(
+            jnp.zeros((cfg.n_layers, batch, src, cfg.n_kv, cfg.d_head),
+                      cfg.dtype) for _ in range(2))
+    return DecodeState(kv=kv, ssm=ssm_state, cross=cross,
+                       pos=jnp.zeros((batch,), jnp.int32))
+
+
+def _constrain_state(state: DecodeState, rules: AxisRules) -> DecodeState:
+    ckv = lambda c: tuple(
+        rules.constrain(t, None, "batch", "cache_seq", None, None)
+        for t in c) if c is not None else None
+    ssm_c = None
+    if state.ssm is not None:
+        ssm_c = ssm_lib.SSMState(
+            conv=rules.constrain(state.ssm.conv, None, "batch", None,
+                                 "ssm_inner"),
+            ssm=rules.constrain(state.ssm.ssm, None, "batch", "ssm_inner",
+                                None))
+    return DecodeState(kv=ckv(state.kv), ssm=ssm_c, cross=ckv(state.cross),
+                       pos=state.pos)
+
+
+def decode_step(params, cfg: ArchConfig, state: DecodeState,
+                tokens: jax.Array, rules: AxisRules = NO_RULES):
+    """One greedy decode step.  tokens: (B, 1) -> (logits (B, V), new state)."""
+    x = L.embed(params["embed"], tokens, rules)        # (B,1,D)
+    pos = state.pos
+    state = _constrain_state(state, rules)
+
+    def attn_body(carry, lp_and_cache):
+        xc = carry
+        if cfg.enc_dec:
+            lp, ck, cv, xk, xv = lp_and_cache
+        else:
+            lp, ck, cv = lp_and_cache
+        h = L.apply_norm(lp["attn_norm"], xc, cfg.norm_type)
+        # nk/nv are this layer's (B, 1, n_kv, d_head) new vectors; the
+        # stacked cache write happens once, after the scan (see
+        # layers.attention_decode cache-write discipline).
+        o, nk, nv = L.attention_decode(
+            lp["attn"], h, ck, cv, pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+            d_head=cfg.d_head, rope_theta=cfg.rope_theta, rules=rules,
+            window=cfg.sliding_window)
+        xc = xc + o
+        if cfg.enc_dec:
+            hc = L.apply_norm(lp["cross_norm"], xc, cfg.norm_type)
+            # cross memory is always fully valid: mask with pos = S_src - 1
+            full_pos = jnp.full_like(pos, xk.shape[1] - 1)
+            oc, _, _ = L.attention_decode(
+                lp["cross"], hc, xk, xv, full_pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, rope_theta=cfg.rope_theta,
+                rules=rules, use_rope=False, update_cache=False)
+            xc = xc + oc
+        hm = L.apply_norm(lp["mlp_norm"], xc, cfg.norm_type)
+        if "moe" in lp:
+            y, _ = moe_lib.moe_forward(lp["moe"], hm, cfg.moe, rules=rules)
+        else:
+            y = L.swiglu(lp["mlp"], hm, rules)
+        return xc + y, (nk, nv)
+
+    def ssm_body(carry, lp_and_state):
+        xc = carry
+        lp, conv, hstate = lp_and_state
+        h = L.apply_norm(lp["norm"], xc, cfg.norm_type)
+        y, new_state = ssm_lib.mamba_decode_step(
+            lp["mamba"], h, ssm_lib.SSMState(conv=conv, ssm=hstate),
+            cfg.ssm, rules)
+        return xc + y, new_state
+
+    def write_kv(kv, new_stacks):
+        return tuple(
+            L.update_cache_stack(c, n, pos, cfg.sliding_window, rules)
+            for c, n in zip(kv, new_stacks))
+
+    new_kv = state.kv
+    new_ssm = state.ssm
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, kvs = lax.scan(attn_body, x,
+                          (params["layers"], state.kv[0], state.kv[1]))
+        new_kv = write_kv(state.kv, kvs)
+    elif cfg.family == "audio":
+        x, kvs = lax.scan(attn_body, x,
+                          (params["layers"], state.kv[0], state.kv[1],
+                           state.cross[0], state.cross[1]))
+        new_kv = write_kv(state.kv, kvs)
+    elif cfg.family == "ssm":
+        x, sstates = lax.scan(ssm_body, x,
+                              (params["layers"], state.ssm.conv,
+                               state.ssm.ssm))
+        new_ssm = ssm_lib.SSMState(conv=sstates.conv, ssm=sstates.ssm)
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        shared = params["shared_attn"]
+
+        def super_body(carry, blk):
+            xc = carry
+            blk_p, conv_s, ssm_s, ck, cv = blk
+            xc, sst = lax.scan(ssm_body, xc, (blk_p, conv_s, ssm_s))
+            h = L.apply_norm(shared["attn_norm"], xc, cfg.norm_type)
+            o, nk, nv = L.attention_decode(
+                shared["attn"], h, ck, cv, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, d_head=cfg.d_head,
+                rope_theta=cfg.rope_theta, rules=rules)  # nk/nv: (B,1,K,d)
+            xc = xc + o
+            hm = L.apply_norm(shared["mlp_norm"], xc, cfg.norm_type)
+            xc = xc + L.swiglu(shared["mlp"], hm, rules)
+            return xc, (sst, nk, nv)
+
+        conv_b = state.ssm.conv[:n_super * per].reshape(
+            n_super, per, *state.ssm.conv.shape[1:])
+        ssm_b = state.ssm.ssm[:n_super * per].reshape(
+            n_super, per, *state.ssm.ssm.shape[1:])
+        x, (sst, nks, nvs) = lax.scan(
+            super_body, x,
+            (params["blocks"], conv_b, ssm_b, state.kv[0], state.kv[1]))
+        new_conv = sst.conv.reshape(-1, *sst.conv.shape[2:])
+        new_h = sst.ssm.reshape(-1, *sst.ssm.shape[2:])
+        if "tail" in params:
+            tail_n = state.ssm.conv.shape[0] - n_super * per
+            x, tst = lax.scan(ssm_body, x,
+                              (params["tail"],
+                               state.ssm.conv[-tail_n:],
+                               state.ssm.ssm[-tail_n:]))
+            new_conv = jnp.concatenate([new_conv, tst.conv], axis=0)
+            new_h = jnp.concatenate([new_h, tst.ssm], axis=0)
+        new_kv = write_kv(state.kv, (nks, nvs))
+        new_ssm = ssm_lib.SSMState(conv=new_conv, ssm=new_h)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = L.unembed(params["embed"], x, rules)[:, 0]
+    new_state = DecodeState(kv=new_kv, ssm=new_ssm, cross=state.cross,
+                            pos=pos + 1)
+    return logits, new_state
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],
+            max_len: int, rules: AxisRules = NO_RULES):
+    """Process a full prompt, building the decode caches.
+
+    Returns (last-token logits (B, V), DecodeState at pos = prompt length).
+    For attention families this runs the train forward and additionally
+    projects per-layer K/V into the cache layout.
+    """
+    x, positions = _embed_inputs(params, cfg, batch, rules)
+    B, S, _ = x.shape
+    state = init_decode_state(cfg, B, max_len, rules)
+    memory = encode(params, cfg, batch["frames"], rules) if cfg.enc_dec \
+        else None
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(carry, lp):
+            xc, aux = carry
+            k, v = L.project_kv(lp["attn"], L.apply_norm(
+                lp["attn_norm"], xc, cfg.norm_type), positions,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, rope_theta=cfg.rope_theta)
+            mem_kv = None
+            if memory is not None:
+                mk, mv = L.project_kv(lp["cross"], memory, None,
+                                      n_kv=cfg.n_kv, d_head=cfg.d_head,
+                                      rope_theta=cfg.rope_theta,
+                                      use_rope=False)
+                mem_kv = (mk, mv)
+            xn, a = _attn_block_fwd(lp, xc, positions, cfg, rules,
+                                    memory=mem_kv)
+            out = (k.astype(cfg.dtype), v.astype(cfg.dtype))
+            if mem_kv is not None:
+                out = out + (mem_kv[0].astype(cfg.dtype),
+                             mem_kv[1].astype(cfg.dtype))
+            return (xn, aux + a), out
+
+        (x, _), kv_all = lax.scan(_maybe_remat(body, cfg),
+                                  (x, jnp.zeros(())), params["layers"])
+        ks, vs = kv_all[0], kv_all[1]
+        Sc = state.kv[0].shape[2]
+        if Sc >= S:
+            nk = lax.dynamic_update_slice_in_dim(
+                state.kv[0], ks, 0, axis=2)
+            nv = lax.dynamic_update_slice_in_dim(
+                state.kv[1], vs, 0, axis=2)
+        else:  # sliding window: keep the last Sc positions
+            nk, nv = ks[:, :, -Sc:], vs[:, :, -Sc:]
+        cross = state.cross
+        if memory is not None:
+            cross = (kv_all[2], kv_all[3])
+        state = DecodeState(kv=(nk, nv), ssm=None, cross=cross,
+                            pos=jnp.full((B,), S, jnp.int32))
+    elif cfg.family == "ssm":
+        def body(xc, lp):
+            h = L.apply_norm(lp["norm"], xc, cfg.norm_type)
+            y, st = ssm_lib.mamba_forward(lp["mamba"], h, cfg.ssm,
+                                          chunk=cfg.ssm_chunk, rules=rules)
+            return xc + y, st
+
+        x, sts = lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        state = DecodeState(
+            kv=None,
+            ssm=ssm_lib.SSMState(conv=sts.conv.astype(cfg.dtype),
+                                 ssm=sts.ssm),
+            cross=None, pos=jnp.full((B,), S, jnp.int32))
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.attn_every
+        per = cfg.attn_every
+        shared = params["shared_attn"]
+
+        def ssm_body(xc, lp):
+            h = L.apply_norm(lp["norm"], xc, cfg.norm_type)
+            y, st = ssm_lib.mamba_forward(lp["mamba"], h, cfg.ssm,
+                                          chunk=cfg.ssm_chunk, rules=rules)
+            return xc + y, st
+
+        def super_body(xc, blk):
+            xc, sts = lax.scan(ssm_body, xc, blk)
+            k, v = L.project_kv(shared["attn"], L.apply_norm(
+                shared["attn_norm"], xc, cfg.norm_type), positions,
+                n_kv=cfg.n_kv, d_head=cfg.d_head, rope_theta=cfg.rope_theta)
+            xn, _ = _attn_block_fwd(shared, xc, positions, cfg, rules)
+            return xn, (sts, k.astype(cfg.dtype), v.astype(cfg.dtype))
+
+        x, (sts, ks, vs) = lax.scan(_maybe_remat(super_body, cfg), x,
+                                    params["blocks"])
+        new_conv = sts.conv.reshape(-1, *sts.conv.shape[2:])
+        new_h = sts.ssm.reshape(-1, *sts.ssm.shape[2:])
+        if "tail" in params:
+            x, tsts = lax.scan(ssm_body, x, params["tail"])
+            new_conv = jnp.concatenate([new_conv, tsts.conv], axis=0)
+            new_h = jnp.concatenate([new_h, tsts.ssm], axis=0)
+        nk = lax.dynamic_update_slice_in_dim(state.kv[0], ks, 0, axis=2)
+        nv = lax.dynamic_update_slice_in_dim(state.kv[1], vs, 0, axis=2)
+        state = DecodeState(
+            kv=(nk, nv),
+            ssm=ssm_lib.SSMState(conv=new_conv.astype(cfg.dtype), ssm=new_h),
+            cross=None, pos=jnp.full((B,), S, jnp.int32))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm_type)
+    logits = L.unembed(params["embed"], x[:, -1:], rules)[:, 0]
+    return logits, state

@@ -1,0 +1,198 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Dispatch plan (DESIGN.md §5, selected by the generalized paper planner —
+``core.distribution.moe_plan`` — for the production mesh): activations arrive
+*replicated* over the model axis (the attention out-projection's psum), so
+each model shard simply gathers the tokens routed to its *local* experts
+(static capacity, sort-free top-C selection), runs its expert GEMMs, and
+scatter-adds the weighted outputs; the existing TP output psum combines
+expert contributions across shards.  Collective volume = one psum of
+(tokens, d_model) per layer — identical to a dense TP FFN; no all-to-all.
+
+Outside shard_map (single-device smoke tests / no mesh) the same code runs
+with n_local = n_experts and no psum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import AxisRules, NO_RULES, init_linear
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_ff: int                 # per-expert hidden (logical)
+    n_experts: int            # logical expert count
+    top_k: int
+    capacity_factor: float = 1.25
+    # EP x TP hybrid: store each expert as ``sub_experts`` slices along d_ff
+    # so n_experts*sub_experts divides the mesh's model axis even when
+    # n_experts alone doesn't (mixtral: 8 experts x 2 subs over 16 shards).
+    # gate/up split exactly (silu(g)*u is elementwise in F); down-proj
+    # partials combine in the dispatch psum that already exists.
+    sub_experts: int = 1
+
+    @property
+    def n_shards_experts(self) -> int:
+        return self.n_experts * self.sub_experts
+
+    @property
+    def d_ff_shard(self) -> int:
+        return self.d_ff // self.sub_experts
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_shards_experts, cfg.d_model, cfg.d_ff_shard
+    scale_in = 1.0 / jnp.sqrt(D)
+    scale_out = 1.0 / jnp.sqrt(cfg.d_ff)
+    return {
+        "router": init_linear(ks[0], D, cfg.n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   * scale_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 * scale_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   * scale_out).astype(dtype),
+    }
+
+
+def logical_expert_weights(params, cfg: MoEConfig):
+    """Reassemble (E_logical, D, F_logical) weights from sub-expert layout
+    (tests / the dense oracle)."""
+    s = cfg.sub_experts
+    if s == 1:
+        return params["w_gate"], params["w_up"], params["w_down"]
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    wg = params["w_gate"].reshape(E, s, D, F // s).transpose(0, 2, 1, 3) \
+        .reshape(E, D, F)
+    wu = params["w_up"].reshape(E, s, D, F // s).transpose(0, 2, 1, 3) \
+        .reshape(E, D, F)
+    wd = params["w_down"].reshape(E, s, F // s, D).reshape(E, F, D)
+    return wg, wu, wd
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return min(n_tokens, max(8, c))
+
+
+def _moe_local(x2d: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+               w_up: jax.Array, w_down: jax.Array, cfg: MoEConfig,
+               expert_offset, axis_name: Optional[str]):
+    """Per-shard MoE: x2d (T, D) replicated; w_* (E_loc, D, F) local experts.
+
+    Returns (y (T, D) [psum'ed over axis_name], aux load-balance loss).
+    """
+    T, D = x2d.shape
+    E = cfg.n_experts
+    e_loc = w_gate.shape[0]
+    cap = _capacity(T, cfg)
+
+    logits = x2d.astype(jnp.float32) @ router_w                 # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = lax.top_k(probs, cfg.top_k)                # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)      # renormalize
+
+    # Switch-style load-balance aux (computed on global stats; identical on
+    # every shard since the router inputs are replicated).
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        (jax.nn.one_hot(top_ids, E, dtype=jnp.float32)).sum(1), axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    def one_expert(e_idx):
+        # sub-expert slot -> logical expert (sub_experts F-slices per expert)
+        eid = (expert_offset + e_idx) // cfg.sub_experts
+        mask = top_ids == eid                                   # (T, K)
+        assigned = jnp.any(mask, axis=-1)
+        weight = jnp.sum(jnp.where(mask, top_p, 0.0), axis=-1)  # (T,)
+        prio = jnp.where(assigned, jnp.arange(T), T + jnp.arange(T))
+        _, idx = lax.top_k(-prio, cap)                          # (cap,)
+        valid = assigned[idx]
+        xg = x2d[idx]                                           # (cap, D)
+        g = xg @ w_gate[e_idx]
+        u = xg @ w_up[e_idx]
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x2d.dtype) * u
+        yo = h @ w_down[e_idx]                                  # (cap, D)
+        yo = yo * (weight[idx] * valid).astype(yo.dtype)[:, None]
+        return idx, yo
+
+    idxs, ys = jax.vmap(one_expert)(jnp.arange(e_loc))          # (E_loc, cap, ·)
+    y = jnp.zeros((T, D), x2d.dtype)
+    y = y.at[idxs.reshape(-1)].add(ys.reshape(-1, D))
+    if axis_name is not None:
+        y = lax.psum(y, axis_name)
+    return y, aux
+
+
+def moe_forward(params: Mapping[str, jax.Array], x: jax.Array,
+                cfg: MoEConfig, *, rules: AxisRules = NO_RULES,
+                expert_axis: str = "model"):
+    """x: (B, S, D) -> (y (B, S, D), aux scalar).
+
+    Under a mesh with experts sharded over ``expert_axis``, runs the
+    shard_map dispatch; otherwise the single-group path (offset 0, all
+    experts local).
+    """
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+    mesh = rules.mesh
+    if mesh is None or not rules.enabled \
+            or rules.rules.get("experts") is None:
+        y, aux = _moe_local(x2d, params["router"], params["w_gate"],
+                            params["w_up"], params["w_down"], cfg,
+                            expert_offset=0, axis_name=None)
+        return y.reshape(B, S, D), aux
+
+    axis = rules.rules.get("experts")
+    n_shards = mesh.shape[axis]
+    if cfg.n_shards_experts % n_shards:
+        raise ValueError(
+            f"{cfg.n_experts} experts x {cfg.sub_experts} subs not divisible "
+            f"by |{axis}|={n_shards}; raise MoEConfig.sub_experts")
+    e_loc = cfg.n_shards_experts // n_shards
+    batch_axes = rules.rules.get("batch")
+
+    def shard_fn(x2d_l, router_w, wg, wu, wd):
+        off = lax.axis_index(axis) * e_loc
+        return _moe_local(x2d_l, router_w, wg, wu, wd, cfg,
+                          expert_offset=off, axis_name=axis)
+
+    y, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(None, None),
+                  P(axis, None, None), P(axis, None, None),
+                  P(axis, None, None)),
+        out_specs=(P(batch_axes, None), P()),
+        check_vma=False,
+    )(x2d, params["router"], params["w_gate"], params["w_up"],
+      params["w_down"])
+    return y.reshape(B, S, D), aux
+
+
+def moe_forward_dense_oracle(params, x: jax.Array, cfg: MoEConfig):
+    """O(T·E) oracle: run every expert on every token, weight by router —
+    no capacity drops.  Tests compare the dispatch path against this with
+    capacity_factor large enough that nothing drops."""
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D).astype(jnp.float32)
+    logits = x2d @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    w = jnp.zeros_like(probs).at[
+        jnp.arange(x2d.shape[0])[:, None], top_ids].set(top_p)  # (T,E)
+    wg, wu, wd = logical_expert_weights(params, cfg)
+    g = jnp.einsum("td,edf->tef", x2d, wg.astype(jnp.float32))
+    u = jnp.einsum("td,edf->tef", x2d, wu.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, wd.astype(jnp.float32))
+    out = jnp.einsum("ted,te->td", y, w)
+    return out.reshape(B, S, D), None

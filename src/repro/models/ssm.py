@@ -1,0 +1,343 @@
+"""Mamba-1 (falcon-mamba) and Mamba-2 (zamba2) blocks.
+
+Train/prefill use a *chunked* selective scan: ``lax.scan`` over time chunks
+carrying the (d_inner, d_state) state, ``associative_scan`` inside a chunk —
+the (B, chunk, D, N) intermediates stay bounded (the pure-JAX mirror of
+``kernels/ssm_scan``).  Decode is the single-step recurrence.
+
+Mamba-2's recurrence is the Mamba-1 diagonal recurrence with the decay shared
+across a head's channels (a_t per head, state = x_t ⊗ B_t); we reuse the same
+chunked machinery with the decay broadcast over head channels — the
+matmul-form SSD algorithm is a §Perf optimisation item, not a correctness
+requirement (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import AxisRules, NO_RULES, init_linear
+
+
+class SSMConfig(NamedTuple):
+    d_model: int
+    d_inner: int
+    d_state: int
+    dt_rank: int
+    conv_kernel: int = 4
+    version: int = 1          # 1 = mamba1 (per-channel dt), 2 = mamba2
+    headdim: int = 64         # mamba2 only
+    n_groups: int = 1         # mamba2 B/C groups
+    # mamba2 chunk algorithm: "ssd" = matmul-form (SSD, [Dao & Gu 2024]) —
+    # O(B·T·D) streamed bytes + (c x c)-per-head chunk matrices on the MXU;
+    # "diag" = elementwise diagonal recurrence — 3x(B,c,D,N) fp32 per chunk
+    # step on the VPU.  ssd cut the zamba2 train_4k memory roofline term
+    # ~24x (EXPERIMENTS.md §Perf iteration 1).
+    algo: str = "ssd"
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def init_mamba(key, cfg: SSMConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    p = {
+        "in_proj": init_linear(ks[0], cfg.d_model, 2 * cfg.d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_kernel, cfg.d_inner),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((cfg.d_inner,), dtype),
+        "out_proj": init_linear(ks[2], cfg.d_inner, cfg.d_model, dtype),
+    }
+    if cfg.version == 1:
+        p.update({
+            # x -> (dt_low, B, C)
+            "x_proj": init_linear(ks[3], cfg.d_inner,
+                                  cfg.dt_rank + 2 * cfg.d_state, dtype),
+            "dt_proj": init_linear(ks[4], cfg.dt_rank, cfg.d_inner, dtype),
+            "dt_bias": jnp.zeros((cfg.d_inner,), jnp.float32),
+            "A_log": jnp.log(jnp.tile(
+                jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+                (cfg.d_inner, 1))),
+            "D": jnp.ones((cfg.d_inner,), jnp.float32),
+        })
+    else:
+        # Mamba-2 params are per-head (H,) rather than (d_inner, N); they get
+        # distinct key names so the lm._PARAM_AXES table can shard v1 and v2
+        # shapes differently (v2 head vectors are replicated — they're tiny).
+        H, N, G = cfg.n_heads, cfg.d_state, cfg.n_groups
+        p.update({
+            "bc_proj": init_linear(ks[3], cfg.d_inner, 2 * G * N, dtype),
+            "dt_head_proj": init_linear(ks[4], cfg.d_inner, H, dtype),
+            "dt_head_bias": jnp.zeros((H,), jnp.float32),
+            "a_log_h": jnp.zeros((H,), jnp.float32),
+            "d_h": jnp.ones((H,), jnp.float32),
+        })
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: (B, T, D); w: (K, D).
+
+    With ``state`` (B, K-1, D) prepended (decode / chunked prefill), returns
+    (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, T+K-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return y + b[None, None], new_state
+
+
+def _pick_chunk(T: int, preferred: int) -> int:
+    """Largest divisor of T that is <= preferred."""
+    c = min(preferred, T)
+    while T % c:
+        c -= 1
+    return c
+
+
+def _chunked_selective_scan(dt_or_decay: jax.Array, u: jax.Array,
+                            Bm: jax.Array, Cm: jax.Array,
+                            A: Optional[jax.Array], h0: jax.Array,
+                            chunk: int):
+    """Fused chunked scan of  h_t = a_t ⊙ h_{t-1} + (u_t ⊗ B_t);
+    y_t = <h_t, C_t>  without ever materialising a (B, T, D, N) tensor.
+
+    dt_or_decay: (B,T,D) — dt when A is given (a = exp(dt·A), mamba1), the
+                 precomputed decay a_t itself when A is None (mamba2).
+    u:  (B,T,D) input-scaled stream (dt*x);  Bm, Cm: (B,T,N).
+    h0: (B,D,N).  Returns (y (B,T,D) fp32, h_T).
+
+    The (chunk, D, N)-sized decay/outer-product/state tensors exist only
+    inside one scan step — the fix for the 4x(B,T,D,N) fp32 blow-up the
+    baseline dry-run measured on the SSM archs (zamba2 prefill_32k:
+    29.9 GiB temp, 1.2e16 HBM bytes; EXPERIMENTS.md §Perf).  This is the
+    pure-JAX mirror of kernels/ssm_scan's stream-once schedule.
+    """
+    B, T, D = u.shape
+    N = Bm.shape[-1]
+    nch = T // chunk
+
+    def to_chunks(x):
+        return x.reshape(B, nch, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    def chunk_step(h, ins):
+        g_c, u_c, b_c, c_c = ins            # (B,chunk,D), ..., (B,chunk,N)
+        if A is not None:
+            a_c = jnp.exp(g_c[..., None] * A[None, None])      # (B,c,D,N)
+        else:
+            a_c = jnp.broadcast_to(g_c[..., None], (*g_c.shape, N))
+        bmat = u_c[..., None] * b_c[:, :, None, :]             # (B,c,D,N)
+        bmat = bmat.at[:, 0].add(a_c[:, 0] * h)
+        _, hs = lax.associative_scan(combine, (a_c, bmat), axis=1)
+        y_c = jnp.einsum("bcdn,bcn->bcd", hs, c_c)             # (B,c,D)
+        return hs[:, -1], y_c
+
+    h_last, ys = lax.scan(
+        chunk_step, h0,
+        (to_chunks(dt_or_decay), to_chunks(u), to_chunks(Bm), to_chunks(Cm)))
+    y = ys.swapaxes(0, 1).reshape(B, T, D)
+    return y, h_last
+
+
+def _ssm_core_m1(params, x: jax.Array, cfg: SSMConfig, chunk: int,
+                 h0: Optional[jax.Array], rules: AxisRules):
+    """Mamba-1 selective SSM over a full sequence. x: (B,T,d_inner)."""
+    B, T, Din = x.shape
+    N = cfg.d_state
+    proj = x @ params["x_proj"]
+    dt_low, Bm, Cm = jnp.split(
+        proj, [cfg.dt_rank, cfg.dt_rank + N], axis=-1)
+    dt = jax.nn.softplus((dt_low @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"])                  # (B,T,Din)
+    A = -jnp.exp(params["A_log"])                              # (Din,N)
+    xf = x.astype(jnp.float32)
+    dt = rules.constrain(dt, "batch", None, "ssm_inner")
+    if h0 is None:
+        h0 = jnp.zeros((B, Din, N), jnp.float32)
+    y, h_last = _chunked_selective_scan(
+        dt, dt * xf, Bm.astype(jnp.float32), Cm.astype(jnp.float32), A, h0,
+        _pick_chunk(T, chunk))
+    y = y + params["D"][None, None] * xf
+    return y.astype(x.dtype), h_last
+
+
+def _ssd_chunked(log_a: jax.Array, u: jax.Array, Bm: jax.Array,
+                 Cm: jax.Array, h0: jax.Array, chunk: int):
+    """Matmul-form chunked SSD [Dao & Gu 2024], G=1 groups.
+
+    Recurrence  h_t = a_t ⊙ h_{t-1} + u_t ⊗ B_t ;  y_t = <h_t, C_t>
+    with a per-head scalar decay a_t = exp(log_a_t).
+
+    log_a: (B,T,H) (= dt·A, so no log(exp()) round trip);
+    u: (B,T,H,P) input stream (dt*x); Bm, Cm: (B,T,N); h0: (B,H,P,N).
+    Returns (y (B,T,H,P) fp32, h_T).
+
+    Per chunk everything is matmul-shaped: S = C·Bᵀ (c,c) shared across
+    heads, the causal-decay mask L[i,j] = exp(cs_i - cs_j) (c,c,H), one
+    (c,c)x(c,P) matmul per head for the intra-chunk term, and a rank-c
+    update for the carried state — O(B·T·D) streamed bytes instead of the
+    diagonal form's 3x(B,T,D,N).  All exp arguments are <= 0 (decays), so
+    every factor is in (0,1] — numerically safe by construction.
+    """
+    B, T, H = log_a.shape
+    P, N = u.shape[-1], Bm.shape[-1]
+    nch = T // chunk
+
+    def to_chunks(x):
+        return x.reshape(B, nch, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    def chunk_step(h, ins):
+        la_c, u_c, b_c, c_c = ins       # (B,c,H), (B,c,H,P), (B,c,N) x2
+        cs = jnp.cumsum(la_c, axis=1)                        # (B,c,H)
+        # S[i,j] = <C_i, B_j>, shared across heads (G=1)
+        S = jnp.einsum("bin,bjn->bij", c_c, b_c)             # (B,c,c)
+        # L[i,j] = prod_{k=j+1..i} a_k = exp(cs_i - cs_j), causal
+        Lmat = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])  # (B,c,c,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        W = jnp.where(causal[None, :, :, None], S[..., None] * Lmat, 0.0)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", W, u_c)      # (B,c,H,P)
+        # inter-chunk: carried state h contributes exp(cs_i)·<h, C_i>
+        y_inter = jnp.einsum("bin,bhpn->bihp", c_c, h) \
+            * jnp.exp(cs)[..., None]
+        # state update: h' = exp(cs_c)·h + sum_j exp(cs_c - cs_j) u_j ⊗ B_j
+        total = cs[:, -1]                                    # (B,H)
+        w_j = jnp.exp(total[:, None, :] - cs)                # (B,c,H)
+        h_new = jnp.exp(total)[..., None, None] * h + jnp.einsum(
+            "bjh,bjhp,bjn->bhpn", w_j, u_c, b_c)
+        return h_new, y_intra + y_inter
+
+    h_last, ys = lax.scan(
+        chunk_step, h0,
+        (to_chunks(log_a), to_chunks(u), to_chunks(Bm), to_chunks(Cm)))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, P)
+    return y, h_last
+
+
+def _ssm_core_m2(params, x: jax.Array, cfg: SSMConfig, chunk: int,
+                 h0: Optional[jax.Array], rules: AxisRules):
+    """Mamba-2 SSD recurrence. x: (B,T,d_inner)."""
+    B, T, Din = x.shape
+    H, Pd, N = cfg.n_heads, cfg.headdim, cfg.d_state
+    bc = x @ params["bc_proj"]                                 # (B,T,2N) (G=1)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus((x @ params["dt_head_proj"]).astype(jnp.float32)
+                         + params["dt_head_bias"])             # (B,T,H)
+    A = -jnp.exp(params["a_log_h"])                            # (H,)
+    xf = x.astype(jnp.float32).reshape(B, T, H, Pd)
+    if cfg.algo == "ssd":
+        log_a = dt * A[None, None]                             # (B,T,H) <= 0
+        u = xf * dt[..., None]                                 # (B,T,H,P)
+        u = rules.constrain(u, "batch", None, "ssm_heads", None)
+        if h0 is None:
+            h0_h = jnp.zeros((B, H, Pd, N), jnp.float32)
+        else:
+            h0_h = h0.reshape(B, H, Pd, N)
+        y_h, h_last_h = _ssd_chunked(log_a, u, Bm.astype(jnp.float32),
+                                     Cm.astype(jnp.float32), h0_h,
+                                     _pick_chunk(T, chunk))
+        y = y_h.reshape(B, T, Din)
+        h_last = h_last_h.reshape(B, Din, N)
+    else:  # "diag": elementwise diagonal recurrence (pre-SSD baseline)
+        decay = jnp.exp(dt * A[None, None])                    # (B,T,H)
+        decay_d = jnp.repeat(decay, Pd, axis=-1)               # (B,T,Din)
+        xdt = (xf * dt[..., None]).reshape(B, T, Din)
+        decay_d = rules.constrain(decay_d, "batch", None, "ssm_inner")
+        xdt = rules.constrain(xdt, "batch", None, "ssm_inner")
+        if h0 is None:
+            h0 = jnp.zeros((B, Din, N), jnp.float32)
+        y, h_last = _chunked_selective_scan(
+            decay_d, xdt, Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            None, h0, _pick_chunk(T, chunk))
+    y = y + jnp.repeat(params["d_h"], Pd)[None, None] \
+        * x.astype(jnp.float32)
+    return y.astype(x.dtype), h_last
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, K-1, d_inner)
+    ssm: jax.Array    # (B, d_inner, d_state) fp32
+
+
+def init_ssm_state(batch: int, cfg: SSMConfig, dtype=jnp.bfloat16) -> SSMState:
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, cfg.d_inner), dtype),
+        ssm=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32))
+
+
+def mamba_forward(params, x: jax.Array, cfg: SSMConfig, *,
+                  chunk: int = 16, rules: AxisRules = NO_RULES,
+                  state: Optional[SSMState] = None):
+    """Full-sequence mamba block. x: (B,T,d_model) -> (y, final SSMState)."""
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = rules.constrain(xin, "batch", "seq", "ssm_inner")
+    conv_state = state.conv if state is not None else None
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    h0 = state.ssm if state is not None else None
+    core = _ssm_core_m1 if cfg.version == 1 else _ssm_core_m2
+    y, h_last = core(params, xc, cfg, chunk, h0, rules)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rules.constrain(y, "batch", "seq", "ssm_inner")
+    return y @ params["out_proj"], SSMState(conv=conv_state, ssm=h_last)
+
+
+def mamba_decode_step(params, x: jax.Array, state: SSMState, cfg: SSMConfig,
+                      rules: AxisRules = NO_RULES):
+    """Single-token recurrence. x: (B,1,d_model) -> (y (B,1,d_model), state)."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                         # (B,1,Din)
+    xc, conv_state = _causal_conv(xin, params["conv_w"], params["conv_b"],
+                                  state.conv)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    xs = xc[:, 0]                                              # (B,Din)
+    if cfg.version == 1:
+        proj = xs @ params["x_proj"]
+        dt_low, Bm, Cm = jnp.split(
+            proj, [cfg.dt_rank, cfg.dt_rank + cfg.d_state], axis=-1)
+        dt = jax.nn.softplus((dt_low @ params["dt_proj"]).astype(jnp.float32)
+                             + params["dt_bias"])              # (B,Din)
+        A = -jnp.exp(params["A_log"])
+        a = jnp.exp(dt[..., None] * A[None])                   # (B,Din,N)
+        bmat = (dt * xs.astype(jnp.float32))[..., None] \
+            * Bm.astype(jnp.float32)[:, None, :]
+        h = a * state.ssm + bmat
+        h = rules.constrain(h, "batch", "ssm_inner", None)
+        y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+        y = y + params["D"][None] * xs.astype(jnp.float32)
+    else:
+        H, Pd, N = cfg.n_heads, cfg.headdim, cfg.d_state
+        bc = xs @ params["bc_proj"]
+        Bm, Cm = jnp.split(bc, 2, axis=-1)
+        dt = jax.nn.softplus((xs @ params["dt_head_proj"])
+                             .astype(jnp.float32)
+                             + params["dt_head_bias"])         # (B,H)
+        A = -jnp.exp(params["a_log_h"])
+        decay = jnp.exp(dt * A[None])                          # (B,H)
+        a = jnp.repeat(decay, Pd, axis=-1)[..., None]          # (B,Din,1)
+        xdt = (xs.astype(jnp.float32).reshape(B, H, Pd)
+               * dt[..., None]).reshape(B, cfg.d_inner)
+        bmat = xdt[..., None] * Bm.astype(jnp.float32)[:, None, :]
+        h = a * state.ssm + bmat
+        h = rules.constrain(h, "batch", "ssm_inner", None)
+        y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+        y = y + jnp.repeat(params["d_h"], Pd)[None] * xs.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0].astype(jnp.float32))
+         .astype(x.dtype))[:, None]
+    return y @ params["out_proj"], SSMState(conv=conv_state, ssm=h)

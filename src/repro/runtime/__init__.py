@@ -1,0 +1,5 @@
+from repro.runtime import (compression, elastic, mesh_utils, serve_loop,
+                           sharding, straggler, train_loop)
+
+__all__ = ["compression", "elastic", "mesh_utils", "serve_loop", "sharding",
+           "straggler", "train_loop"]

@@ -1,0 +1,51 @@
+"""Gradient compression: int8 quantization with error feedback (EF-SGD style).
+
+Used as an optional hook in the train step: gradients are quantized to int8
+with a per-leaf scale before the cross-replica reduction and dequantized
+after, with the quantization residual fed back into the next step — the
+standard distributed-optimization bandwidth trick (DESIGN.md §5).  Under
+jit+GSPMD the reduction is implicit in the sharded grad computation, so the
+hook quantizes the *accumulated* gradient (bytes crossing the DP boundary at
+the optimizer step in a ZeRO-style layout); the collective-volume effect is
+evaluated in the §Perf log.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    x = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_feedback(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Quantize (grads + carried error); return (dequantized grads, new error).
+
+    error is a pytree like grads (fp32).  Initialize with zeros_like.
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        dq = dequantize_int8(q, s)
+        return dq.astype(g.dtype), g32 - dq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))
+
+
+def init_error_feedback(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                        grads_like)

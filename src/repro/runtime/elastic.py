@@ -1,0 +1,57 @@
+"""Elastic restart: resume a checkpoint on a different mesh.
+
+The checkpoint format stores logical arrays (checkpoint/ckpt.py), so scaling
+the job up/down is: build the new mesh → derive the new shardings from the
+same logical-axis rules → ``load_checkpoint`` with them.  Batch/microbatch
+geometry is re-derived from the new DP size; the step-indexed data pipeline
+resumes at the saved step with the new host shard layout (data/synthetic.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro import checkpoint as ckpt_lib
+from repro.models import lm
+from repro.models.layers import AxisRules
+from repro.optim import adamw_init
+from repro.runtime.mesh_utils import dp_size
+from repro.runtime.sharding import make_rules
+
+
+def resume_or_init(cfg: lm.ArchConfig, mesh: jax.sharding.Mesh,
+                   ckpt_dir: str, key,
+                   mode: str = "train") -> Tuple[object, object, int,
+                                                 AxisRules]:
+    """Returns (params, opt_state, start_step, rules) on the given mesh —
+    restoring (and resharding) from the latest checkpoint if one exists."""
+    rules = make_rules(cfg, mesh, mode)
+    step = ckpt_lib.latest_step(ckpt_dir)
+    abstract = jax.eval_shape(lambda k: lm.init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+    shardings = lm.param_shardings(cfg, rules)
+    if step is None:
+        params = lm.init_params(cfg, key)
+        params = jax.tree.map(
+            lambda p, s: jax.device_put(p, s), params, shardings)
+        return params, adamw_init(params), 0, rules
+    params = ckpt_lib.load_checkpoint(ckpt_dir, step, abstract, shardings)
+    opt_abstract = jax.eval_shape(adamw_init, abstract)
+    try:
+        opt = ckpt_lib.load_checkpoint(ckpt_dir, step, opt_abstract)
+    except KeyError:
+        opt = adamw_init(params)
+    return params, opt, step, rules
+
+
+def rebatch_for_mesh(global_batch: int, mesh: jax.sharding.Mesh,
+                     prev_microbatches: int) -> int:
+    """Re-derive a valid microbatch count after a mesh-size change."""
+    dp = dp_size(mesh)
+    n = prev_microbatches
+    while n > 1 and (global_batch // n) % dp:
+        n -= 1
+    while (global_batch // n) % dp and n <= global_batch:
+        n += 1
+    return n

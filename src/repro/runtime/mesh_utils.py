@@ -1,0 +1,24 @@
+"""Mesh construction helpers (Auto axis types pinned for GSPMD)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: every axis that is not 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_size(mesh: jax.sharding.Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,53 @@
+"""Batched serving loop: prefill + greedy decode with continuous slots.
+
+CPU-scale serving used by the examples; the same prefill/decode_step pair is
+what the dry-run lowers at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.layers import AxisRules, NO_RULES
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    steps: int = 0
+
+
+def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
+             max_new_tokens: int, rules: AxisRules = NO_RULES,
+             eos_id: Optional[int] = None):
+    """Greedy generation for a batch of same-length prompts.
+
+    Returns (generated (B, max_new_tokens) int32, ServeStats).
+    """
+    B, S = batch["tokens"].shape
+    stats = ServeStats(prefill_tokens=B * S)
+    logits, state = jax.jit(
+        lambda p, b: lm.prefill(p, cfg, b, max_len=S + max_new_tokens,
+                                rules=rules))(params, batch)
+    step_fn = jax.jit(lambda p, s, t: lm.decode_step(p, cfg, s, t, rules))
+    toks = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    outs: List[jax.Array] = [toks]
+    finished = jnp.zeros((B,), bool)
+    for _ in range(max_new_tokens - 1):
+        logits, state = step_fn(params, state, toks)
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        if eos_id is not None:
+            finished = finished | (toks[:, 0] == eos_id)
+            toks = jnp.where(finished[:, None], eos_id, toks)
+        outs.append(toks)
+        stats.decode_tokens += B
+        stats.steps += 1
+        if eos_id is not None and bool(finished.all()):
+            break
+    return jnp.concatenate(outs, axis=1), stats

@@ -1,0 +1,93 @@
+"""Logical-axis sharding rules per (mode, arch, mesh) — DESIGN.md §5.
+
+The single source of truth for how every logical axis maps onto the mesh.
+The §Perf hillclimb edits these tables (or passes ``overrides``) — model
+code never changes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.models.layers import AxisRules
+from repro.models.lm import ArchConfig
+from repro.runtime.mesh_utils import dp_axes
+
+
+def _divisible(n: int, mesh: jax.sharding.Mesh, axis: str) -> bool:
+    return n > 0 and n % mesh.shape[axis] == 0
+
+
+def make_rules(cfg: ArchConfig, mesh: jax.sharding.Mesh, mode: str,
+               overrides: Optional[Dict[str, object]] = None) -> AxisRules:
+    """mode: train | prefill | decode."""
+    dp = dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    rules: Dict[str, object] = {
+        # --- parameters ---
+        "embed": "data",            # FSDP: d_model rows of weight matrices
+        "qkv_out": "model",         # TP: fused head dim of wq/wk/wv/wo
+        "ff": "model",              # TP: MLP hidden
+        "experts": "model",         # EP: expert dim of MoE weights
+        "vocab": "model",           # TP: unembed / logits vocab dim
+        "vocab_table": None,        # embed table rows (see DESIGN.md §5)
+        "embed_model": "model",     # embed table cols -> collective-free take
+        "ssm_proj": "model",        # mamba in_proj cols
+        "ssm_inner": "model",       # mamba d_inner (state, conv, A, D)
+        "ssm_heads": "model",       # mamba2 head dim (= ssm_inner/headdim,
+                                    # head-major layout keeps them aligned)
+        # --- activations ---
+        "batch": dp,
+        "seq": None,
+        # Megatron-SP residual sharding — REFUTED on this GSPMD version
+        # (EXPERIMENTS.md §Perf iterations 3-4): constraining the residual
+        # stream (or the psum outputs) to seq-sharded does NOT turn the TP
+        # all-reduce into reduce-scatter; GSPMD keeps the all-reduce and
+        # adds a full all-gather at block entry (+7.0e12 B/dev measured on
+        # mistral-large train_4k).  Left off; flipping to "model" re-runs
+        # the experiment.  Proper SP needs the blocks written in shard_map
+        # with explicit psum_scatter (future work).
+        "seq_res": None,
+        "embed_act": None,          # d_model of activations: replicated (TP)
+        "heads": "model" if cfg.attn_plan == "head_tp" else None,
+        "seq_attn": "model" if cfg.attn_plan == "seq_tp" else None,
+        "cache_seq": None,
+        "ff_act": "model",
+    }
+    if mode == "decode":
+        # flash-decoding plan: cache sequence-sharded over model, batch on dp
+        rules["cache_seq"] = "model"
+        rules["heads"] = None
+        rules["seq_attn"] = None
+        if cfg.family in ("ssm", "hybrid"):
+            rules["cache_seq"] = "model"
+    if mode in ("prefill", "decode"):
+        # Serving has no optimizer state, so the FSDP ("data") factor of
+        # the weight sharding buys nothing and costs a per-step weight
+        # all-gather — 10.6 GB/token measured on mixtral-8x7b long_500k
+        # decode (collective-dominant at batch 1; EXPERIMENTS.md §Perf
+        # iteration D).  Replicate weights over "data" whenever the
+        # model-axis shard fits comfortably (<= 8 GiB/device); only
+        # mistral-large-123b (15.4 GiB bf16 / 16 shards) keeps the 2D
+        # sharding.
+        try:
+            shard_bytes = cfg.param_count() * 2 / mesh.shape["model"]
+        except Exception:
+            shard_bytes = float("inf")
+        if shard_bytes <= 8 * 2 ** 30:
+            rules["embed"] = None
+    if overrides:
+        rules.update(overrides)
+    return AxisRules(rules=rules, mesh=mesh, enabled=True)
+
+
+def batch_shape_check(cfg: ArchConfig, mesh: jax.sharding.Mesh,
+                      global_batch: int, mode: str) -> None:
+    dp = dp_axes(mesh)
+    n = 1
+    for a in dp:
+        n *= mesh.shape[a]
+    if global_batch % n and global_batch >= n:
+        raise ValueError(f"global_batch {global_batch} not divisible by "
+                         f"dp={n}")

@@ -1,0 +1,77 @@
+"""Straggler mitigation at the step-loop level.
+
+On a real pod, intra-step stragglers are absorbed by the synchronous
+collectives; what the framework can and must do at this layer is
+(a) detect persistently slow steps (preemption signals, failing hosts),
+(b) keep the job alive by checkpoint+restart with the elastic path, and
+(c) keep the input pipeline ahead of the device (prefetch) so host hiccups
+don't stall the step.  This module provides the watchdog + prefetcher; the
+restart wiring lives in launch/train.py.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+
+class StepWatchdog:
+    """Tracks step durations; flags steps slower than k× the rolling median."""
+
+    def __init__(self, window: int = 50, slow_factor: float = 3.0,
+                 on_slow: Optional[Callable[[int, float, float], None]] = None):
+        self.durations: collections.deque = collections.deque(maxlen=window)
+        self.slow_factor = slow_factor
+        self.on_slow = on_slow
+        self.slow_steps: list[int] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start(self, step: int) -> None:
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        dt = time.monotonic() - self._t0
+        med = self.median()
+        if med is not None and dt > self.slow_factor * med:
+            self.slow_steps.append(self._step)
+            if self.on_slow:
+                self.on_slow(self._step, dt, med)
+        self.durations.append(dt)
+        return dt
+
+    def median(self) -> Optional[float]:
+        if not self.durations:
+            return None
+        s = sorted(self.durations)
+        return s[len(s) // 2]
+
+
+class Prefetcher:
+    """Background-thread batch prefetch (keeps the host pipeline ahead)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

@@ -1,0 +1,103 @@
+"""Paper §5.2.2 operation approximation: error bounds, recovery calibration,
+and the Table-5 accuracy-delta reproduction hooks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx
+
+
+def test_fast_exp_error_band():
+    x = jnp.linspace(-10, 10, 20001)
+    rel = jnp.abs(approx.fast_exp(x) - jnp.exp(x)) / jnp.exp(x)
+    assert float(rel.max()) < 0.045         # ~3.9% worst case (measured)
+    assert float(rel.mean()) < 0.02
+
+
+def test_fast_exp_recovery_centers_error():
+    """The §5.2.2 recovery multiplier centres the mean ratio at ~1."""
+    x = jax.random.uniform(jax.random.PRNGKey(0), (10_000,), minval=-10,
+                           maxval=10)
+    ratio_rec = jnp.exp(x) / approx.fast_exp(x, recover=True)
+    ratio_raw = jnp.exp(x) / approx.fast_exp(x, recover=False)
+    assert abs(float(ratio_rec.mean()) - 1.0) \
+        < abs(float(ratio_raw.mean()) - 1.0)
+    assert abs(float(ratio_rec.mean()) - 1.0) < 2e-3
+
+
+def test_recovery_constants_match_calibration():
+    """Stored constants == calibrate_recovery output (seed-0, 10k samples)."""
+    x = jax.random.uniform(jax.random.PRNGKey(0), (10_000,), minval=-10,
+                           maxval=10)
+    c = approx.calibrate_recovery(
+        lambda v: approx.fast_exp(v, recover=False), jnp.exp, x)
+    assert abs(c - approx.EXP_RECOVERY) < 5e-4
+
+
+def test_fast_inv_sqrt_error():
+    x = jnp.linspace(0.01, 100.0, 10001)
+    rel = jnp.abs(approx.fast_inv_sqrt(x) - 1 / jnp.sqrt(x)) * jnp.sqrt(x)
+    assert float(rel.max()) < 5e-3          # 1 Newton step + recovery
+
+
+def test_fast_reciprocal_error():
+    x = jnp.linspace(0.01, 100.0, 10001)
+    rel = jnp.abs(approx.fast_reciprocal(x) - 1 / x) * x
+    assert float(rel.max()) < 2e-2
+
+
+def test_approx_softmax_is_distribution(key):
+    b = jax.random.normal(key, (32, 10)) * 5
+    c = approx.approx_softmax(b)
+    np.testing.assert_allclose(np.asarray(c.sum(-1)), 1.0, atol=5e-3)
+    assert (np.asarray(c) >= 0).all()
+    exact = jax.nn.softmax(b, -1)
+    assert float(jnp.abs(c - exact).max()) < 0.02
+
+
+def test_approx_squash_close_to_exact(key):
+    s = jax.random.normal(key, (64, 16)) * 3
+    a = approx.approx_squash(s)
+    e = approx.exact_squash(s)
+    assert float(jnp.abs(a - e).max()) < 0.02
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(-80.0, 80.0))
+def test_property_fast_exp_positive_and_monotone_neighborhood(x):
+    fe = approx.fast_exp(jnp.asarray([x, x + 0.1], jnp.float32))
+    assert float(fe[0]) > 0.0
+    assert float(fe[1]) >= float(fe[0]) * 0.99  # monotone up to approx error
+
+
+def test_fast_exp_extreme_clamp():
+    """Clamp keeps the bitcast in range — no inf/nan/negatives."""
+    x = jnp.asarray([-1e4, -200.0, 0.0, 88.0, 200.0, 1e4], jnp.float32)
+    y = approx.fast_exp(x)
+    assert bool(jnp.isfinite(y).all())
+    assert (np.asarray(y) >= 0).all()
+
+
+def test_accuracy_loss_on_routing_output(key):
+    """Table-5 micro-proxy on *random* votes: approximated routing perturbs
+    class probabilities by <1e-2, and classification only flips when the
+    top-2 margin is within the perturbation (near-ties; random inputs have
+    no trained structure — the full trained-model delta is
+    tests/test_capsnet.py::test_table5_accuracy_delta)."""
+    from repro.core import routing
+    u_hat = jax.random.normal(key, (64, 32, 10, 16))
+    v_exact = routing.dynamic_routing(
+        u_hat, routing.RoutingConfig(iterations=3))
+    v_apx = routing.dynamic_routing(
+        u_hat, routing.RoutingConfig(iterations=3, use_approx=True))
+    n_e = jnp.linalg.norm(v_exact, axis=-1)
+    n_a = jnp.linalg.norm(v_apx, axis=-1)
+    dmax = float(jnp.abs(n_e - n_a).max())
+    assert dmax < 0.01
+    top2 = jnp.sort(n_e, axis=-1)[:, -2:]
+    margin = top2[:, 1] - top2[:, 0]
+    flipped = jnp.argmax(n_e, -1) != jnp.argmax(n_a, -1)
+    # decisive inputs never flip
+    assert not bool(jnp.any(flipped & (margin > 2 * dmax)))

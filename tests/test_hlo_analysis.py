@@ -1,0 +1,113 @@
+"""Unit tests for the trip-count-aware HLO analyzer — the measurement
+stack behind §Roofline (EXPERIMENTS.md)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+SYNTH = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %res = f32[8,8]{1,0} get-tuple-element(%w), index=1
+  %ar = f32[8,8]{1,0} all-reduce(%res), replica_groups=[16,16]<=[256], to_apply=%add_comp
+  ROOT %out = f32[8,8]{1,0} add(%ar, %a)
+}
+"""
+
+
+def test_trip_count_multiplies_loop_flops():
+    stats = H.analyze_hlo(SYNTH, 256)
+    # dot 2*8*8*8=1024 x5 trips; body add (scalar) x5; cond compare x5;
+    # entry add 64 once
+    assert stats.flops == pytest.approx(5 * 1024 + 5 + 5 + 64, rel=0.01)
+
+
+def test_collective_group_size_and_volume():
+    stats = H.analyze_hlo(SYNTH, 256)
+    # all-reduce of 8*8*4 bytes over groups of 16: 2*(15/16)*256
+    assert stats.collective_bytes == pytest.approx(2 * 15 / 16 * 256)
+    assert stats.collective_by_kind["all-reduce"] == stats.collective_bytes
+    # f32 but < 1MiB -> counted at full width in bf16eq too
+    assert stats.collective_bytes_bf16eq == stats.collective_bytes
+
+
+def test_hbm_bounds_ordering():
+    stats = H.analyze_hlo(SYNTH, 256)
+    assert 0 < stats.hbm_bytes_lower <= stats.hbm_bytes
+
+
+def test_shape_bytes_tuple_and_layout():
+    assert H._shape_bytes("f32[4,64]{1,0}") == 4 * 64 * 4
+    assert H._shape_bytes("bf16[2,3]") == 12
+    assert H._shape_bytes("(s32[], f32[8,8])") == 4 + 256
+
+
+def test_real_compiled_module_consistency():
+    """Analyzer vs a real compiled module: flops within 2x of analytic."""
+    def f(x, w):
+        for _ in range(3):
+            x = jnp.tanh(x @ w)
+        return x
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    stats = H.analyze_hlo(txt, 1)
+    want = 3 * 2 * 32 * 64 * 64          # three matmuls
+    assert want <= stats.flops <= 2.5 * want
+    assert stats.collective_bytes == 0
+
+
+def test_scanned_module_trip_count():
+    """lax.scan trip counts are picked up from the compiled while loop."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((16, 32), jnp.float32)
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    stats = H.analyze_hlo(txt, 1)
+    one_mm = 2 * 16 * 32 * 32
+    assert stats.flops >= 7 * one_mm     # all 7 iterations counted
+
+
+def test_cpu_bf16_artifact_detector():
+    """The fp32-shadow detector fires on a big bf16 convert and not on a
+    small one."""
+    big = 1 << 28  # 256 MiB of f32 = 64Mi elements -> dims 8192x8192
+    txt = f"""
+HloModule m
+ENTRY %main (a: bf16[8192,8192]) -> f32[8192,8192] {{
+  %a = bf16[8192,8192]{{1,0}} parameter(0)
+  ROOT %c = f32[8192,8192]{{1,0}} convert(%a)
+}}
+"""
+    assert H.cpu_bf16_artifact_bytes(txt) == 8192 * 8192 * 4
+    small = txt.replace("8192,8192", "16,16")
+    assert H.cpu_bf16_artifact_bytes(small) == 0

@@ -1,0 +1,283 @@
+"""Per-kernel allclose vs the ref.py oracles (interpret mode), with shape /
+dtype sweeps as the task spec requires."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import approx
+from repro.kernels.fastmath import ops as fm_ops
+from repro.kernels.fastmath import ref as fm_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.routing import ops as rt_ops
+from repro.kernels.routing import ref as rt_ref
+from repro.kernels.routing.kernel import routing_iteration_fused
+from repro.kernels.ssm_scan import ops as ssm_ops
+from repro.kernels.ssm_scan import ref as ssm_ref
+
+
+# ---------------------------------------------------------------------------
+# routing kernel
+# ---------------------------------------------------------------------------
+
+ROUTING_SHAPES = [
+    (2, 64, 4, 8),      # tiny
+    (4, 128, 10, 16),   # caps-MNIST-like geometry (scaled down)
+    (1, 256, 11, 16),   # CIFAR-like H
+    (8, 128, 5, 8),     # batch-heavy
+]
+
+
+@pytest.mark.parametrize("shape", ROUTING_SHAPES)
+@pytest.mark.parametrize("l_tile", [32, 64])
+def test_routing_iteration_vs_ref(key, shape, l_tile):
+    B, L, H, C = shape
+    u_hat = jax.random.normal(key, shape)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (L, H))
+    v_prev = jax.random.normal(jax.random.fold_in(key, 2), (B, H, C))
+    s_k, b_k = routing_iteration_fused(u_hat, b, v_prev, l_tile=l_tile)
+    s_r, b_r = rt_ref.routing_iteration_ref(u_hat, b, v_prev)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("iters", [1, 3])
+@pytest.mark.parametrize("use_approx", [False, True])
+def test_routing_full_vs_ref(key, iters, use_approx):
+    u_hat = jax.random.normal(key, (4, 128, 10, 16))
+    v_k = rt_ops.dynamic_routing_fused(u_hat, iterations=iters,
+                                       use_approx=use_approx)
+    v_r = rt_ref.dynamic_routing_ref(u_hat, iters, use_approx)
+    np.testing.assert_allclose(v_k, v_r, rtol=1e-4, atol=1e-5)
+
+
+def test_routing_fused_matches_core(key):
+    """kernels path == core.routing (two independent implementations)."""
+    from repro.core import routing as core_routing
+    u_hat = jax.random.normal(key, (2, 128, 10, 16))
+    v_core = core_routing.dynamic_routing(
+        u_hat, core_routing.RoutingConfig(iterations=3))
+    v_fused = rt_ops.dynamic_routing_fused(u_hat, iterations=3)
+    np.testing.assert_allclose(v_core, v_fused, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 4), lt=st.sampled_from([16, 32]),
+       nl=st.integers(2, 6), h=st.integers(2, 12), c=st.integers(4, 16))
+def test_property_routing_kernel(b, lt, nl, h, c):
+    L = lt * nl
+    key = jax.random.PRNGKey(b * 7 + L)
+    u_hat = jax.random.normal(key, (b, L, h, c))
+    bmat = jnp.zeros((L, h))
+    v0 = jnp.zeros((b, h, c))
+    s_k, b_k = routing_iteration_fused(u_hat, bmat, v0, l_tile=lt)
+    s_r, b_r = rt_ref.routing_iteration_ref(u_hat, bmat, v0)
+    np.testing.assert_allclose(s_k, s_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(b_k, b_r, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fastmath kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8,), (100,), (16, 32), (3, 5, 7)])
+@pytest.mark.parametrize("op,ref,tol", [
+    ("exp", fm_ref.exp_ref, 0.045),
+    ("inv_sqrt", fm_ref.inv_sqrt_ref, 0.005),
+    ("reciprocal", fm_ref.reciprocal_ref, 0.02),
+])
+def test_fastmath_vs_ref(key, shape, op, ref, tol):
+    x = jax.random.uniform(key, shape, minval=0.1, maxval=8.0)
+    if op == "exp":
+        x = x - 4.0    # exercise negatives
+    got = getattr(fm_ops, op)(x)
+    want = ref(x)
+    rel = np.abs(np.asarray(got) - np.asarray(want)) / np.abs(want)
+    assert rel.max() < tol
+    assert got.shape == x.shape
+
+
+def test_fastmath_matches_core_approx(key):
+    """kernel path == core.approx bit-level functions (same algorithm;
+    rtol covers fma-fusion op-ordering differences)."""
+    x = jax.random.uniform(key, (64, 64), minval=-5, maxval=5)
+    np.testing.assert_allclose(fm_ops.exp(x), approx.fast_exp(x),
+                               rtol=5e-5, atol=1e-8)
+    xp = jnp.abs(x) + 0.1
+    np.testing.assert_allclose(fm_ops.inv_sqrt(xp), approx.fast_inv_sqrt(xp),
+                               rtol=1e-6)
+    np.testing.assert_allclose(fm_ops.reciprocal(xp),
+                               approx.fast_reciprocal(xp), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, Hq, Hkv, S, D, causal)
+    (1, 2, 2, 128, 32, True),
+    (2, 4, 2, 128, 64, True),       # GQA group=2
+    (1, 8, 2, 256, 64, True),       # GQA group=4
+    (2, 2, 2, 128, 32, False),      # bidirectional
+    (1, 2, 1, 64, 128, True),       # small S < block
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_ref(key, case):
+    B, Hq, Hkv, S, D, causal = case
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Hq, S, D), jnp.float32)
+    k = jax.random.normal(kk, (B, Hkv, S, D), jnp.float32)
+    v = jax.random.normal(kv, (B, Hkv, S, D), jnp.float32)
+    got = fa_ops.attention(q, k, v, causal=causal)
+    want = fa_ref.mha_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4),
+                                       (jnp.bfloat16, 2e-2)])
+def test_flash_attention_dtypes(key, dtype, tol):
+    q = jax.random.normal(key, (1, 2, 128, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 2, 128, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (1, 2, 128, 32)).astype(dtype)
+    got = fa_ops.attention(q, k, v, causal=True)
+    want = fa_ref.mha_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                               rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+BWD_CASES = [
+    (1, 2, 2, 64, 16, True),
+    (2, 4, 2, 64, 16, True),      # GQA group=2 (dk/dv group-sum)
+    (1, 8, 2, 64, 32, True),      # GQA group=4
+    (1, 2, 1, 128, 32, False),    # bidirectional
+]
+
+
+@pytest.mark.parametrize("case", BWD_CASES)
+def test_flash_attention_backward_vs_ref(key, case):
+    """custom_vjp over the Pallas fwd/bwd kernels == jax.grad of the dense
+    reference, for o/dq/dk/dv."""
+    B, Hq, Hkv, S, D, causal = case
+    kq, kk, kv, kd = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, Hq, S, D))
+    k = jax.random.normal(kk, (B, Hkv, S, D))
+    v = jax.random.normal(kv, (B, Hkv, S, D))
+    do = jax.random.normal(kd, (B, Hq, S, D))
+    o, vjp = jax.vjp(lambda q, k, v: fa_ops.attention_train(q, k, v, causal),
+                     q, k, v)
+    dq, dk, dv = vjp(do)
+    o_r, vjp_r = jax.vjp(
+        lambda q, k, v: fa_ref.mha_ref(q, k, v, causal=causal), q, k, v)
+    dq_r, dk_r, dv_r = vjp_r(do)
+    for name, a, b in [("o", o, o_r), ("dq", dq, dq_r), ("dk", dk, dk_r),
+                       ("dv", dv, dv_r)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_flash_attention_lse_matches_dense(key):
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd_lse
+    q = jax.random.normal(key, (1, 2, 64, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 64, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 64, 16))
+    _, lse = flash_attention_fwd_lse(q, k, v, causal=True, block_q=32,
+                                     block_k=32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / 16 ** 0.5
+    mask = jnp.tril(jnp.ones((64, 64), bool))
+    logits = jnp.where(mask, logits, -jnp.inf)
+    want = jax.nn.logsumexp(logits, axis=-1)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 32), (32, 64)])
+def test_flash_attention_block_sweep(key, bq, bk):
+    q = jax.random.normal(key, (1, 2, 128, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32))
+    got = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = fa_ref.mha_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan kernel
+# ---------------------------------------------------------------------------
+
+SSM_CASES = [
+    # (B, T, Din, N, chunk)
+    (1, 64, 16, 8, 16),
+    (2, 128, 32, 16, 32),
+    (2, 64, 8, 4, 64),      # chunk == T
+    (1, 96, 16, 8, 32),     # T = 3 chunks
+]
+
+
+def _ssm_inputs(key, B, T, Din, N):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (B, T, Din))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, Din)))
+    A = -jnp.abs(jax.random.normal(ks[2], (Din, N)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    Dv = jax.random.normal(ks[5], (Din,))
+    return x, dt, A, Bm, Cm, Dv
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+def test_ssm_scan_vs_ref(key, case):
+    from repro.kernels.ssm_scan.kernel import selective_scan
+    B, T, Din, N, chunk = case
+    x, dt, A, Bm, Cm, Dv = _ssm_inputs(key, B, T, Din, N)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk //= 2
+    got = selective_scan(x, dt, A, Bm, Cm, Dv, chunk=chunk)
+    want, _ = ssm_ref.selective_scan_ref(x, dt, A, Bm, Cm, Dv)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_ops_wrapper(key):
+    x, dt, A, Bm, Cm, Dv = _ssm_inputs(key, 2, 96, 16, 8)
+    got = ssm_ops.scan(x, dt, A, Bm, Cm, Dv)
+    want, _ = ssm_ref.selective_scan_ref(x, dt, A, Bm, Cm, Dv)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_step_matches_scan(key):
+    """Token-by-token selective_step_ref == full-scan ref (state carry)."""
+    x, dt, A, Bm, Cm, Dv = _ssm_inputs(key, 2, 16, 8, 4)
+    want, h_last = ssm_ref.selective_scan_ref(x, dt, A, Bm, Cm, Dv)
+    h = jnp.zeros((2, 8, 4))
+    ys = []
+    for t in range(16):
+        y, h = ssm_ref.selective_step_ref(h, x[:, t], dt[:, t], A,
+                                          Bm[:, t], Cm[:, t], Dv)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), want, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, h_last, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 2), nch=st.integers(1, 3),
+       din=st.sampled_from([8, 16]), n=st.sampled_from([4, 8]))
+def test_property_ssm_scan(b, nch, din, n):
+    from repro.kernels.ssm_scan.kernel import selective_scan
+    T = nch * 16
+    key = jax.random.PRNGKey(b * 100 + T + din)
+    x, dt, A, Bm, Cm, Dv = _ssm_inputs(key, b, T, din, n)
+    got = selective_scan(x, dt, A, Bm, Cm, Dv, chunk=16)
+    want, _ = ssm_ref.selective_scan_ref(x, dt, A, Bm, Cm, Dv)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,221 @@
+"""Runtime substrate: optimizer, schedules, checkpointing, compression,
+straggler watchdog, data pipeline determinism, elastic rebatching."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint as ck
+from repro.data.synthetic import (SyntheticCapsDataset, SyntheticLMDataset,
+                                  lm_batch_iterator)
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, linear_warmup_cosine)
+from repro.runtime import compression, elastic
+from repro.runtime.straggler import Prefetcher, StepWatchdog
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)
+        params, opt = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adamw_weight_decay_only_matrices(key):
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    opt = adamw_init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5)
+    p2, _ = adamw_update(zeros, opt, params, cfg)
+    assert float(jnp.abs(p2["w"] - params["w"]).max()) > 1e-4  # decayed
+    np.testing.assert_allclose(p2["b"], params["b"])            # not decayed
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_and_decay():
+    s = [float(linear_warmup_cosine(jnp.asarray(i), 10, 100))
+         for i in range(101)]
+    assert s[0] < s[5] < s[10]                      # warming up
+    assert s[10] == pytest.approx(max(s), rel=1e-6)  # peak at warmup end
+    assert s[100] <= 0.1 + 1e-6                      # decayed to final_frac
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(key):
+    return {"layer": {"w": jax.random.normal(key, (4, 8)),
+                      "b": jnp.zeros((8,))},
+            "step_arrays": [jnp.ones((2,)), jnp.zeros((3,), jnp.int32)]}
+
+
+def test_checkpoint_roundtrip(tmp_path, key):
+    tree = _tree(key)
+    ck.save_checkpoint(str(tmp_path), 7, tree)
+    assert ck.latest_step(str(tmp_path)) == 7
+    restored = ck.load_checkpoint(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path, key):
+    ck.save_checkpoint(str(tmp_path), 1, _tree(key))
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_async_checkpointer_gc(tmp_path, key):
+    acp = ck.AsyncCheckpointer(str(tmp_path), keep=2)
+    for s in range(5):
+        acp.save(s, _tree(key))
+    acp.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path)
+                   if d.startswith("step_"))
+    assert steps == [3, 4]
+    restored = ck.load_checkpoint(str(tmp_path), 4, _tree(key))
+    assert ck.latest_step(str(tmp_path)) == 4
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, key):
+    ck.save_checkpoint(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        ck.load_checkpoint(str(tmp_path), 1, {"w": jnp.ones((5,))})
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_int8_quantization_bounded_error(key):
+    x = jax.random.normal(key, (128,)) * 3
+    q, s = compression.quantize_int8(x)
+    err = jnp.abs(compression.dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps(key):
+    """EF-SGD: with a constant gradient, the *accumulated* compressed sum
+    tracks the true sum (residual stays bounded)."""
+    g = {"w": jax.random.normal(key, (64,)) * 0.01}
+    err = compression.init_error_feedback(g)
+    total = jnp.zeros((64,))
+    for i in range(50):
+        dq, err = compression.compress_grads_with_feedback(g, err)
+        total = total + dq["w"]
+    want = g["w"] * 50
+    resid = jnp.abs(total - want)
+    # residual bounded by one quantization step, not growing with steps
+    q, s = compression.quantize_int8(g["w"])
+    assert float(resid.max()) <= float(s) * 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-6, 1e3))
+def test_property_quantize_roundtrip_scale(scale):
+    x = jnp.linspace(-scale, scale, 63)
+    q, s = compression.quantize_int8(x)
+    dq = compression.dequantize_int8(q, s)
+    assert float(jnp.abs(dq - x).max()) <= float(s) * 0.5 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# straggler watchdog + prefetcher
+# ---------------------------------------------------------------------------
+
+def test_watchdog_flags_slow_step():
+    events = []
+    wd = StepWatchdog(window=10, slow_factor=2.0,
+                      on_slow=lambda s, dt, med: events.append(s))
+    for i in range(5):
+        wd.start(i)
+        time.sleep(0.01)
+        wd.stop()
+    wd.start(99)
+    time.sleep(0.08)
+    wd.stop()
+    assert 99 in wd.slow_steps and events == [99]
+
+
+def test_prefetcher_preserves_order():
+    pf = Prefetcher(iter(range(20)), depth=4)
+    assert list(pf) == list(range(20))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_lm_dataset_deterministic_and_step_indexed():
+    ds = SyntheticLMDataset(vocab=64, seq_len=16, seed=3)
+    b1 = ds.batch(5, 8)
+    b2 = ds.batch(5, 8)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch(6, 8)["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_lm_dataset_learnable_structure():
+    """The planted bigram must dominate: >60% of transitions follow it."""
+    ds = SyntheticLMDataset(vocab=64, seq_len=128, seed=0)
+    b = ds.batch(0, 16)
+    follows = (b["labels"] == (31 * b["tokens"] + 7) % 64).mean()
+    assert follows > 0.6
+
+
+def test_host_sharding_partitions_batch():
+    ds = SyntheticLMDataset(vocab=64, seq_len=8, seed=0)
+    full = ds.batch(0, 8)["tokens"]
+    it0 = lm_batch_iterator(ds, 8, shard=(0, 2))
+    it1 = lm_batch_iterator(ds, 8, shard=(1, 2))
+    s0 = next(it0)["tokens"]
+    s1 = next(it1)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([s0, s1]), full)
+
+
+def test_caps_dataset_class_conditional():
+    ds = SyntheticCapsDataset(image_hw=20, channels=1, n_classes=5, seed=0)
+    b = ds.batch(0, 32)
+    assert b["images"].shape == (32, 20, 20, 1)
+    assert b["images"].min() >= 0 and b["images"].max() <= 1
+    # same class -> similar images (correlation), different class -> less
+    imgs, labels = b["images"].reshape(32, -1), b["labels"]
+    same = [np.corrcoef(imgs[i], imgs[j])[0, 1]
+            for i in range(32) for j in range(i + 1, 32)
+            if labels[i] == labels[j]][:20]
+    diff = [np.corrcoef(imgs[i], imgs[j])[0, 1]
+            for i in range(32) for j in range(i + 1, 32)
+            if labels[i] != labels[j]][:20]
+    assert np.mean(same) > np.mean(diff)
+
+
+# ---------------------------------------------------------------------------
+# elastic rebatching
+# ---------------------------------------------------------------------------
+
+def test_rebatch_for_mesh():
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+            self.axis_names = tuple(shape)
+    m = FakeMesh({"data": 8, "model": 4})
+    n = elastic.rebatch_for_mesh(256, m, prev_microbatches=8)
+    assert (256 // n) % 8 == 0
