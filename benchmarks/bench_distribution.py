@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
 from repro.core import distribution as D
+from repro.core.router import ExecutionPlan, RouterSpec, plan_axes
 
 FREQS_MHZ = (312.5, 625.0, 937.5)
 
@@ -38,6 +39,22 @@ def main():
     print(f"# dimension choice flips with frequency for: "
           f"{sorted(flips) or 'none'} (paper Fig.18: choice is "
           f"config- and frequency-dependent)")
+    # cross-check: the Router's plan="auto" resolution agrees with the
+    # offline planner at every Fig.18 operating point (planner -> execution
+    # loop, closed through one API)
+    mismatches = []
+    for f in FREQS_MHZ:
+        dev = D.DeviceModel.hmc(freq_hz=f * 1e6)
+        for name, cfg in CAPS_BENCHMARKS.items():
+            s = D.RPShape.from_caps_config(cfg)
+            axes = plan_axes(RouterSpec(iterations=s.iters),
+                             ExecutionPlan(auto=True, device=dev,
+                                           rp_shape=s),
+                             ((s.n_b, s.n_l, s.n_h, s.c_h),))
+            if axes and axes[0][0] != D.plan(s, dev):
+                mismatches.append((f, name, axes, D.plan(s, dev)))
+    print(f"# Router plan='auto' vs offline planner: "
+          f"{'MISMATCH ' + repr(mismatches) if mismatches else 'agree on all cells'}")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from benchmarks.common import time_call
 from repro.configs.caps_benchmarks import smoke_caps
 from repro.core import capsule_layers as CL
-from repro.core import pipeline, routing
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
 from repro.models import capsnet
 
 
@@ -23,7 +23,7 @@ def main(n_micro: int = 4, batch: int = 8):
     cfg = smoke_caps()
     key = jax.random.PRNGKey(0)
     params = capsnet.init_capsnet(key, cfg)
-    rc = routing.RoutingConfig(iterations=cfg.routing_iters)
+    spec = RouterSpec(algorithm="dynamic", iterations=cfg.routing_iters)
     micro = jax.random.uniform(
         key, (n_micro, batch, cfg.image_hw, cfg.image_hw,
               cfg.image_channels))
@@ -32,11 +32,10 @@ def main(n_micro: int = 4, batch: int = 8):
         u = capsnet.primary_caps(params, images, cfg)
         return CL.predict_votes(params["digit"], u)
 
-    def stage_b(u_hat):
-        return routing.dynamic_routing(u_hat, rc)
-
-    piped = jax.jit(
-        lambda m: pipeline.software_pipeline_scan(stage_a, stage_b, m))
+    # stage_b (the RP) + the microbatch overlap in one ExecutionPlan
+    piped = jax.jit(build_router(
+        spec, ExecutionPlan(pipeline="software", stage_a=stage_a)))
+    stage_b = build_router(spec)
     seq = jax.jit(
         lambda m: jax.vmap(lambda x: stage_b(stage_a(x)))(m))
 

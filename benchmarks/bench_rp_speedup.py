@@ -4,10 +4,11 @@ distribution-planned execution.
 Two complementary measurements:
 
 (1) MEASURED (this container, CPU): the naive RP (materialise every
-    intermediate — the paper's GPU-pathology baseline, ref.py) vs the fused
-    single-pass schedule (kernels/routing via interpret mode is pure-python
-    — we time its jnp mirror, the lazy-update schedule with no re-reads) —
-    the memory-traffic ratio the kernel eliminates.
+    intermediate — the paper's GPU-pathology baseline) vs the optimised
+    single-pass schedule through the unified Router API (jnp backend; the
+    Pallas backend's interpret mode is pure-python and not a meaningful
+    wall-clock subject on CPU) — the memory-traffic ratio the kernel
+    eliminates.
 
 (2) MODELED (paper Table-4 operating points): the analytical execution-time
     model S⁻¹ = αE + βM (core.distribution) evaluated with the paper's HMC
@@ -23,8 +24,7 @@ import jax.numpy as jnp
 from benchmarks.common import time_call
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
 from repro.core import distribution as D
-from repro.core import routing
-from repro.kernels.routing import ref as rt_ref
+from repro.core.router import RouterSpec, build_router
 
 # P100 operating point for the modeled GPU baseline (paper Table 4)
 P100_FLOPS = 9.5e12          # FP32
@@ -60,11 +60,15 @@ def measured_speedups(batch: int = 2):
                 b = b + agree.sum(0)
             return v
 
-        def fused(uh):
-            return rt_ref.dynamic_routing_ref(uh, cfg.routing_iters)
+        # the optimised schedule through the unified Router API (jnp
+        # backend: scan-based single-pass routing, no materialised
+        # intermediates; the Pallas backend's interpret mode is pure
+        # python and not a meaningful wall-clock subject on CPU)
+        router = build_router(RouterSpec(algorithm="dynamic",
+                                         iterations=cfg.routing_iters))
 
         t_n = time_call(jax.jit(naive), u_hat)
-        t_f = time_call(jax.jit(fused), u_hat)
+        t_f = time_call(jax.jit(lambda uh: router(uh)), u_hat)
         rows.append((name, t_n, t_f, t_n / t_f))
     return rows
 

@@ -1,6 +1,7 @@
 """The paper's inter-vault distribution (§5.1) executed on a multi-device
-mesh: shard the routing procedure on B / L / H, verify all three give the
-same answer, and show the planner's choice.
+mesh through the unified Router API: shard the routing procedure on B / L /
+H, verify all three give the same answer, show the planner's choice, and let
+``plan="auto"`` pick the dimension itself.
 
 Runs on 8 simulated host devices (sets XLA_FLAGS before importing jax —
 run this file directly, not via an already-initialized interpreter).
@@ -13,27 +14,28 @@ os.environ.setdefault("XLA_FLAGS",
 
 import jax                                                     # noqa: E402
 import jax.numpy as jnp                                        # noqa: E402
-from jax.sharding import AxisType                              # noqa: E402
 
+from repro import compat                                       # noqa: E402
 from repro.core import distribution as D                       # noqa: E402
-from repro.core import routing                                 # noqa: E402
+from repro.core.router import (ExecutionPlan, RouterSpec,      # noqa: E402
+                               build_router)
 
 
 def main():
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("vault",),
-                         axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("vault",))
     print(f"mesh: {n_dev} devices on one 'vault' axis "
           f"(paper: 32 HMC vaults)")
 
     B, L, H, C = 16, 64, 8, 16
     key = jax.random.PRNGKey(0)
     u_hat = jax.random.normal(key, (B, L, H, C))
-    cfg = routing.RoutingConfig(iterations=3)
-    v_ref = routing.dynamic_routing(u_hat, cfg)
+    spec = RouterSpec(algorithm="dynamic", iterations=3)
+    v_ref = build_router(spec)(u_hat)
 
     for dim in ("B", "L", "H"):
-        routed = routing.make_sharded_routing(mesh, dim, "vault", cfg)
+        routed = build_router(
+            spec, ExecutionPlan(mesh=mesh, axes=((dim, "vault"),)))
         v = jax.jit(routed)(u_hat)
         err = float(jnp.abs(v - v_ref).max())
         txt = jax.jit(routed).lower(u_hat).compile().as_text()
@@ -42,18 +44,37 @@ def main():
         print(f"  {dim}-sharded: max err vs unsharded {err:.2e}; "
               f"collectives in HLO: {colls}")
 
-    # beyond-paper: 2D distribution on a (2, n/2) torus
-    mesh2 = jax.make_mesh((2, n_dev // 2), ("data", "model"),
-                          axis_types=(AxisType.Auto,) * 2)
-    routed2 = routing.make_multi_sharded_routing(
-        mesh2, (("B", "data"), ("L", "model")), cfg)
+    # beyond-paper: 2D distribution on a (2, n/2) torus — one ExecutionPlan,
+    # two sharded dims
+    mesh2 = compat.make_mesh((2, n_dev // 2), ("data", "model"))
+    routed2 = build_router(
+        spec, ExecutionPlan(mesh=mesh2,
+                            axes=(("B", "data"), ("L", "model"))))
     v2 = jax.jit(routed2)(u_hat)
     print(f"  B x L 2D-sharded: max err {float(jnp.abs(v2 - v_ref).max()):.2e}")
 
+    # planner -> execution, closed loop: plan="auto" runs §5.1.2 inside
+    # build_router and shards the argmax dimension
     s = D.RPShape(n_b=B, n_l=L, n_h=H, c_l=8, c_h=C, iters=3)
     dev = D.DeviceModel.tpu_v5e(n_dev)
+    auto = build_router(spec, ExecutionPlan(mesh=mesh, auto=True, device=dev,
+                                            rp_shape=s))
+    v3 = jax.jit(auto)(u_hat)
     print(f"planner pick for this shape: {D.plan(s, dev)} "
           f"(scores: { {d: round(v, 3) for d, v in D.score_table(s, dev).items()} })")
+    print(f"  plan='auto' resolved {auto.resolve(u_hat)}, "
+          f"max err {float(jnp.abs(v3 - v_ref).max()):.2e}")
+
+    # EM routing through the SAME entry point (paper §2.2 generality claim)
+    votes = jax.random.normal(key, (B, L, 4, 8))
+    a_in = jax.nn.sigmoid(jax.random.normal(key, (B, L)))
+    em_ref = build_router(RouterSpec(algorithm="em"))(votes, a_in)
+    em_l = build_router(RouterSpec(algorithm="em"),
+                        ExecutionPlan(mesh=mesh, axes=(("L", "vault"),)))
+    pose, act = jax.jit(em_l)(votes, a_in)
+    print(f"  EM L-sharded: max pose err "
+          f"{float(jnp.abs(pose - em_ref[0]).max()):.2e}, "
+          f"max act err {float(jnp.abs(act - em_ref[1]).max()):.2e}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
 """Quickstart: the paper's technique in five minutes on CPU.
 
 1. Build a CapsNet (paper Fig.2) and run inference with dynamic routing.
-2. Swap in the paper's §5.2.2 approximated special functions — same
-   classification, one extra multiply per op.
+2. Swap in the paper's §5.2.2 approximated special functions through the
+   unified Router API — same classification, one extra multiply per op.
 3. Ask the §5.1.2 planner which dimension to distribute the routing
-   procedure on for (a) the paper's HMC and (b) a TPU v5e pod.
-4. Run the routing procedure through the fused Pallas kernel path
+   procedure on — and let ``plan="auto"`` make the same choice inside
+   ``build_router`` (the planner -> execution loop, closed).
+4. Run the routing procedure through the fused Pallas kernel backend
    (interpret mode on CPU) and check it agrees.
 
     PYTHONPATH=src python examples/quickstart.py
@@ -15,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
 from repro.core import distribution as D
-from repro.core import routing
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
 
@@ -29,38 +30,48 @@ def main():
     batch = ds.batch(0, 8)
     images = jnp.asarray(batch["images"])
 
-    # 1 — exact dynamic routing (paper Algorithm 1)
+    # 1 — exact dynamic routing (paper Algorithm 1; default RouterSpec)
     out = capsnet.forward(params, images, cfg)
     print("capsule norms (input 0):",
           [f"{p:.3f}" for p in out["class_probs"][0]])
 
-    # 2 — approximated special functions (paper §5.2.2)
-    rc_apx = routing.RoutingConfig(iterations=cfg.routing_iters,
-                                   use_approx=True)
-    out_apx = capsnet.forward(params, images, cfg, rc_apx)
+    # 2 — approximated special functions (paper §5.2.2), via the Router API:
+    #     one spec field, same call site.
+    router_apx = build_router(RouterSpec(iterations=cfg.routing_iters,
+                                         use_approx=True))
+    out_apx = capsnet.forward(params, images, cfg, router=router_apx)
     drift = float(jnp.abs(out["class_probs"] - out_apx["class_probs"]).max())
     same = bool(jnp.all(jnp.argmax(out["class_probs"], -1)
                         == jnp.argmax(out_apx["class_probs"], -1)))
     print(f"approx routing: max prob drift {drift:.4f}, "
           f"same classification: {same}")
 
-    # 3 — the execution-score planner (paper §5.1.2, S = 1/(aE + bM))
+    # 3 — the execution-score planner (paper §5.1.2, S = 1/(aE + bM)), and
+    #     plan="auto": build_router runs the same planner internally and
+    #     picks the sharded dimension itself.
     caps_mn1 = CAPS_BENCHMARKS["Caps-MN1"]
     s = D.RPShape.from_caps_config(caps_mn1)
     for dev_name, dev in [("HMC 32 vaults (paper Table 4)", D.DeviceModel.hmc()),
                           ("TPU v5e 256 chips", D.DeviceModel.tpu_v5e(256))]:
         table = D.score_table(s, dev)
         pick = D.plan(s, dev)
+        auto_router = build_router(
+            RouterSpec(iterations=s.iters),
+            ExecutionPlan(auto=True, device=dev, rp_shape=s))
+        auto_axes = auto_router.resolve(
+            jnp.zeros((s.n_b, s.n_l, s.n_h, s.c_h)))
         print(f"planner[{dev_name}]: scores "
               + ", ".join(f"{d}={v:.3g}" for d, v in table.items())
-              + f" -> distribute on {pick}")
+              + f" -> distribute on {pick}; plan='auto' resolves "
+              + f"{auto_axes or 'unsharded'}")
 
-    # 4 — fused-kernel path (Pallas, interpret mode on CPU)
-    rc_fused = routing.RoutingConfig(iterations=cfg.routing_iters,
-                                     fused=True)
-    out_fused = capsnet.forward(params, images, cfg, rc_fused)
+    # 4 — fused-kernel backend (Pallas; the capability check selects
+    #     interpret mode off-TPU), replacing the old fused=True bool.
+    router_fused = build_router(RouterSpec(iterations=cfg.routing_iters,
+                                           backend="pallas"))
+    out_fused = capsnet.forward(params, images, cfg, router=router_fused)
     err = float(jnp.abs(out["v"] - out_fused["v"]).max())
-    print(f"fused kernel vs reference routing: max |dv| = {err:.2e}")
+    print(f"pallas backend vs jnp backend routing: max |dv| = {err:.2e}")
 
 
 if __name__ == "__main__":

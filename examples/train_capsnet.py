@@ -15,7 +15,7 @@ import numpy as np
 
 from repro import checkpoint as ck
 from repro.configs.caps_benchmarks import smoke_caps
-from repro.core import routing
+from repro.core.router import RouterSpec, build_router
 from repro.data.synthetic import SyntheticCapsDataset, caps_batch_iterator
 from repro.models import capsnet
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
@@ -33,10 +33,10 @@ def main():
     args = ap.parse_args()
 
     cfg = smoke_caps()
-    rc = routing.RoutingConfig(
+    router = build_router(RouterSpec(
         iterations=cfg.routing_iters,
         use_approx=args.routing == "approx",
-        fused=args.routing == "fused")
+        backend="pallas" if args.routing == "fused" else "jnp"))
     ocfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
     key = jax.random.PRNGKey(0)
 
@@ -60,7 +60,8 @@ def main():
     @jax.jit
     def step_fn(params, opt, images, labels, lr_scale):
         (loss, m), grads = jax.value_and_grad(
-            capsnet.loss_fn, has_aux=True)(params, images, labels, cfg, rc)
+            capsnet.loss_fn, has_aux=True)(params, images, labels, cfg,
+                                           router=router)
         params, opt = adamw_update(grads, opt, params, ocfg, lr_scale)
         return params, opt, loss, m
 
@@ -83,7 +84,8 @@ def main():
     hits = n = 0
     for j in range(1000, 1004):
         b = ds.batch(j, 64)
-        out = capsnet.forward(params, jnp.asarray(b["images"]), cfg, rc)
+        out = capsnet.forward(params, jnp.asarray(b["images"]), cfg,
+                              router=router)
         hits += int((jnp.argmax(out["class_probs"], -1)
                      == jnp.asarray(b["labels"])).sum())
         n += 64

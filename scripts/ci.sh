@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + example smoke runs.
+#
+#   scripts/ci.sh            # full tier-1 + smoke
+#   scripts/ci.sh --fast     # tier-1 only
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: pytest =="
+# pythonpath comes from pyproject.toml [tool.pytest.ini_options]
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
+  PYTHONPATH=src python examples/quickstart.py
+fi
+
+echo "CI OK"

@@ -75,11 +75,27 @@ def predict_votes(params, u: jax.Array) -> jax.Array:
     return jnp.einsum("blc,lhcd->blhd", u, params["W"])
 
 
-def caps_layer_forward(params, u: jax.Array,
-                       cfg: routing_lib.RoutingConfig) -> jax.Array:
-    """Full Caps layer: Eq.1 votes + routing procedure.  -> v:(B,H,C_H)."""
+def caps_layer_forward(params, u: jax.Array, route) -> jax.Array:
+    """Full Caps layer: Eq.1 votes + routing procedure.  -> v:(B,H,C_H).
+
+    ``route`` selects the routing execution (DESIGN.md §Router):
+      * a built ``repro.core.router.Router`` (or any callable u_hat -> v),
+      * a ``RouterSpec`` (built on the spot, unsharded plan),
+      * a legacy ``RoutingConfig`` — runs ``dynamic_routing`` directly so
+        ambient-axis collectives still work when the caller is already
+        inside its own shard_map (e.g. the full-train dry-run cell).
+    """
     u_hat = predict_votes(params, u)
-    return routing_lib.dynamic_routing(u_hat, cfg)
+    if isinstance(route, routing_lib.RoutingConfig):
+        return routing_lib.dynamic_routing(u_hat, route)
+    from repro.core import router as router_lib
+    if isinstance(route, router_lib.RouterSpec):
+        return router_lib.build_router(route)(u_hat)
+    if callable(route):
+        return route(u_hat)
+    raise TypeError(
+        f"route must be a Router/callable, RouterSpec, or RoutingConfig; "
+        f"got {type(route).__name__}")
 
 
 # --- decoding stage (paper §2.1: FC reconstruction decoder) ----------------

@@ -12,7 +12,8 @@ beta a communication coefficient (1/bisection bandwidth).
 
 TPU adaptation (DESIGN.md §2): a vault = a mesh shard.  alpha/beta come from
 the chip FLOP/s and the ICI link bandwidth; the chosen dimension becomes the
-PartitionSpec used by ``core.routing.make_sharded_routing``.  The closed forms
+sharded dim of a ``core.router.ExecutionPlan`` (``plan="auto"`` runs this
+planner inside ``build_router``).  The closed forms
 are kept exactly as printed in the paper so the Fig.18 sensitivity experiment
 reproduces; a measured-collective variant (from lowered HLO) backs the §Perf
 hillclimb.

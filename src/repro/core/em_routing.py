@@ -67,7 +67,9 @@ def em_routing(votes: jax.Array, a_in: jax.Array,
 
 def make_sharded_em_routing(mesh, dim: str, axis_name: str,
                             cfg: EMRoutingConfig = EMRoutingConfig()):
-    """The paper's §5.1 distribution applied to EM routing (its claimed
+    """DEPRECATED shim — use ``repro.core.router.build_router`` instead.
+
+    The paper's §5.1 distribution applied to EM routing (its claimed
     generality: "can be easily applied to other routing algorithms").
 
     dim "L": the M-step's three L-aggregations become psums on
@@ -75,23 +77,10 @@ def make_sharded_em_routing(mesh, dim: str, axis_name: str,
     dim "B": every batch shard is independent — no collectives at all
     (EM's statistics are per-input, unlike Dynamic Routing's shared b).
     """
-    import functools
-    P = jax.sharding.PartitionSpec
-    if dim not in ("B", "L"):
-        raise ValueError("EM routing shards on B or L (H-sharding would "
-                         "split the per-H Gaussian statistics)")
-    votes_spec = {"B": P(axis_name, None, None, None),
-                  "L": P(None, axis_name, None, None)}[dim]
-    a_spec = {"B": P(axis_name, None), "L": P(None, axis_name)}[dim]
-    out_specs = ({"B": P(axis_name, None, None), "L": P(None, None, None)}[dim],
-                 {"B": P(axis_name, None), "L": P(None, None)}[dim])
-    run_cfg = cfg._replace(sharded_dim=dim if dim == "L" else None,
-                           axis_name=axis_name if dim == "L" else None)
-
-    @functools.partial(jax.shard_map, mesh=mesh,
-                       in_specs=(votes_spec, a_spec), out_specs=out_specs,
-                       check_vma=False)
-    def routed(votes_local, a_local):
-        return em_routing(votes_local, a_local, run_cfg)
-
-    return routed
+    from repro.core import router as router_lib
+    spec = router_lib.RouterSpec(
+        algorithm="em", iterations=cfg.iterations).with_options(
+            beta_a=cfg.beta_a, beta_u=cfg.beta_u,
+            inv_temp=cfg.inv_temp, eps=cfg.eps)
+    plan = router_lib.ExecutionPlan(mesh=mesh, axes=((dim, axis_name),))
+    return router_lib.build_router(spec, plan)

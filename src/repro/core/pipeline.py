@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 P = jax.sharding.PartitionSpec
 
 
@@ -97,8 +99,7 @@ def two_stage_pipeline(stage_a: Callable, stage_b: Callable,
         return lax.psum(jnp.where(stage == 1, outs, jnp.zeros_like(outs)),
                         axis)
 
-    return jax.jit(jax.shard_map(
-        per_device, mesh=mesh,
-        in_specs=P(*(None,) * 1),      # microbatches replicated on `axis`
-        out_specs=P(),                 # outputs replicated
-        check_vma=False))
+    return jax.jit(compat.shard_map(
+        per_device, mesh,
+        P(*(None,) * 1),               # microbatches replicated on `axis`
+        P()))                          # outputs replicated

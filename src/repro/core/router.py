@@ -1,0 +1,487 @@
+"""Unified Router API — one entry point for algorithm x backend x plan.
+
+The paper's central claim is compositional: the routing procedure's
+dimension-level parallelism (§5.1, Table 2) can be planned offline
+(§5.1.2, S = 1/(alpha*E + beta*M)) and "easily applied to other routing
+algorithms" (§2.2).  This module is that claim as an API:
+
+    spec = RouterSpec(algorithm="dynamic", backend="pallas", iterations=3)
+    plan = ExecutionPlan(mesh=mesh, axes=(("B", "vault"),))
+    router = build_router(spec, plan)
+    v = router(u_hat)                       # jit-ready callable
+
+Three orthogonal choices compose:
+
+  * RouterSpec — WHAT to route: an algorithm from the registry ("dynamic"
+    [Sabour et al. 2017] or "em" [Hinton et al. 2018], both over the common
+    (B, L, H, C) vote layout) and a kernel backend ("jnp" | "pallas"; the
+    Pallas backend replaces the old ``RoutingConfig.fused`` bool and runs
+    the fused-iteration kernel, in interpret mode off-TPU).
+  * ExecutionPlan — WHERE/HOW to run it: unsharded, one dim sharded over a
+    mesh axis (the paper's inter-vault distribution), several dims at once
+    (2D torus), or the paper's §4 host||PIM two-stage pipeline.  With
+    ``plan="auto"`` the §5.1.2 execution-score planner picks the sharded
+    dimension from an RPShape + DeviceModel derived from the votes shape
+    and the mesh — closing the planner -> execution loop that previously
+    required hand-wiring ``plan()``'s "B"|"L"|"H" into a PartitionSpec.
+  * build_router(spec, plan) — the façade that fuses the two into a single
+    callable.
+
+New algorithms/backends register via ``register_algorithm`` instead of
+growing another parallel ``make_sharded_*`` code path (DESIGN.md §Router).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import distribution as dist_lib
+from repro.core import em_routing as em_lib
+from repro.core import pipeline as pipeline_lib
+from repro.core import routing as routing_lib
+
+P = jax.sharding.PartitionSpec
+
+BACKENDS = ("jnp", "pallas")
+
+
+# ---------------------------------------------------------------------------
+# RouterSpec — algorithm x backend (+ static algorithm options)
+# ---------------------------------------------------------------------------
+
+class RouterSpec(NamedTuple):
+    """Static routing specification (hashable; safe as a jit static arg).
+
+    algorithm: registry name ("dynamic" | "em" | user-registered).
+    backend:   "jnp" (pure-XLA path) or "pallas" (fused-iteration kernel;
+               replaces the old ``RoutingConfig.fused`` bool).
+    options:   algorithm-specific extras as a sorted (name, value) tuple,
+               e.g. (("beta_a", 1.0),) for EM.  Use ``spec.option(name)``.
+    """
+    algorithm: str = "dynamic"
+    backend: str = "jnp"
+    iterations: int = 3
+    use_approx: bool = False
+    options: Tuple[Tuple[str, Any], ...] = ()
+
+    def option(self, name: str, default: Any = None) -> Any:
+        for k, v in self.options:
+            if k == name:
+                return v
+        return default
+
+    def with_options(self, **kw) -> "RouterSpec":
+        merged = dict(self.options)
+        merged.update(kw)
+        return self._replace(options=tuple(sorted(merged.items())))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A routing algorithm over the common (B, L, H, C) vote layout.
+
+    run(args, spec, axes): the per-shard computation; ``axes`` maps each
+        sharded logical dim to its mesh axis name and the implementation
+        must insert the matching cross-shard aggregations (paper Table 2).
+    in_specs/out_specs(axes): shard_map PartitionSpecs for the callable's
+        inputs/outputs under that axes mapping.
+    sharded_dims: logical dims this algorithm can shard ("B"/"L"/"H").
+    backends: supported kernel backends.
+    """
+    name: str
+    run: Callable[[tuple, RouterSpec, Mapping[str, str]], Any]
+    in_specs: Callable[[Mapping[str, str]], tuple]
+    out_specs: Callable[[Mapping[str, str]], Any]
+    sharded_dims: Tuple[str, ...] = ("B", "L", "H")
+    backends: Tuple[str, ...] = ("jnp",)
+    num_inputs: int = 1
+    describe: str = ""
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(algo: Algorithm) -> Algorithm:
+    if algo.name in _REGISTRY:
+        raise ValueError(f"algorithm {algo.name!r} already registered")
+    _REGISTRY[algo.name] = algo
+    return algo
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown routing algorithm {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def registered_algorithms() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --- "dynamic" [Sabour et al. 2017] — paper Algorithm 1 --------------------
+
+def _pallas_interpret_mode() -> bool:
+    """Capability check for the Pallas backend: compiled pallas_call needs a
+    TPU; everywhere else (CPU/GPU containers, tests) run interpret mode."""
+    return jax.default_backend() != "tpu"
+
+
+def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
+    (u_hat,) = args
+    if spec.backend == "pallas":
+        from repro.kernels.routing import ops as routing_ops
+        return routing_ops.dynamic_routing_fused(
+            u_hat, iterations=spec.iterations, use_approx=spec.use_approx,
+            interpret=_pallas_interpret_mode())
+    cfg = routing_lib.RoutingConfig(
+        iterations=spec.iterations, use_approx=spec.use_approx,
+        axes=tuple(sorted(axes.items())) or None)
+    return routing_lib.dynamic_routing(u_hat, cfg)
+
+
+DYNAMIC = register_algorithm(Algorithm(
+    name="dynamic",
+    run=_dynamic_run,
+    in_specs=lambda ax: (P(ax.get("B"), ax.get("L"), ax.get("H"), None),),
+    out_specs=lambda ax: P(ax.get("B"), ax.get("H"), None),
+    sharded_dims=("B", "L", "H"),
+    backends=("jnp", "pallas"),
+    describe="dynamic routing (paper Alg.1): u_hat (B,L,H,C) -> v (B,H,C)",
+))
+
+
+# --- "em" [Hinton, Sabour, Frosst 2018] ------------------------------------
+
+def _em_run(args, spec: RouterSpec, axes: Mapping[str, str]):
+    votes, a_in = args
+    cfg = em_lib.EMRoutingConfig(
+        iterations=spec.iterations,
+        beta_a=spec.option("beta_a", 1.0),
+        beta_u=spec.option("beta_u", 1.0),
+        inv_temp=spec.option("inv_temp", 1.0),
+        eps=spec.option("eps", 1e-9),
+        sharded_dim="L" if "L" in axes else None,
+        axis_name=axes.get("L"))
+    return em_lib.em_routing(votes, a_in, cfg)
+
+
+EM = register_algorithm(Algorithm(
+    name="em",
+    run=_em_run,
+    in_specs=lambda ax: (P(ax.get("B"), ax.get("L"), None, None),
+                         P(ax.get("B"), ax.get("L"))),
+    # pose (B,H,C) + activations (B,H); the L-psums leave outputs
+    # replicated on L's axis, so only B stays sharded.
+    out_specs=lambda ax: (P(ax.get("B"), None, None), P(ax.get("B"), None)),
+    # H-sharding would split the per-H Gaussian statistics.
+    sharded_dims=("B", "L"),
+    backends=("jnp",),
+    num_inputs=2,
+    describe="EM routing: votes (B,L,H,C) + a_in (B,L) -> (pose, a_out)",
+))
+
+
+# ---------------------------------------------------------------------------
+# ExecutionPlan — distribution + pipelining
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Where and how the routing procedure executes.
+
+    One type unifies the previously separate execution paths:
+
+      ExecutionPlan()                                   unsharded
+      ExecutionPlan(mesh=m, axes=(("B", "x"),))         single-dim shard_map
+      ExecutionPlan(mesh=m, axes=(("B","data"),
+                                  ("L","model")))       multi-dim shard_map
+      ExecutionPlan(mesh=m, auto=True)                  §5.1.2 planner picks
+      ExecutionPlan(mesh=m, pipeline="two_stage", ...)  paper §4 host||PIM
+      ExecutionPlan(pipeline="software")                skewed-scan overlap
+
+    auto: derive RPShape from the votes shape (or use ``rp_shape``), derive
+        a DeviceModel from the mesh (or use ``device``), evaluate the
+        execution score S = 1/(alpha*E + beta*M) per shardable-and-divisible
+        dimension, and shard the argmax — ``plan="auto"`` in build_router.
+    pipeline: "software" (single-group skewed scan) or "two_stage"
+        (disjoint device groups on ``pipeline_axis``, |axis| == 2); the
+        router then consumes stacked microbatches (n_micro, ...).
+        ``stage_a`` is the producer stage (e.g. conv + votes); identity
+        when omitted.
+    """
+    mesh: Optional[jax.sharding.Mesh] = None
+    axes: Tuple[Tuple[str, str], ...] = ()
+    auto: bool = False
+    device: Optional[dist_lib.DeviceModel] = None
+    rp_shape: Optional[dist_lib.RPShape] = None
+    pipeline: Optional[str] = None
+    pipeline_axis: str = "pipe"
+    stage_a: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.pipeline not in (None, "software", "two_stage"):
+            raise ValueError(f"unknown pipeline kind {self.pipeline!r}")
+        if self.axes and self.auto:
+            raise ValueError("ExecutionPlan: give explicit axes OR auto=True,"
+                             " not both")
+        for d, a in self.axes:
+            if self.mesh is None:
+                raise ValueError("ExecutionPlan with sharded axes needs a "
+                                 "mesh")
+            if a not in self.mesh.axis_names:
+                raise ValueError(f"axis {a!r} not in mesh axes "
+                                 f"{self.mesh.axis_names}")
+
+
+def _normalize_plan(plan) -> ExecutionPlan:
+    if plan is None:
+        return ExecutionPlan()
+    if isinstance(plan, str):
+        if plan == "auto":
+            return ExecutionPlan(auto=True)
+        raise ValueError(f"unknown plan {plan!r} (expected None, 'auto', or "
+                         "an ExecutionPlan)")
+    if isinstance(plan, ExecutionPlan):
+        return plan
+    raise TypeError(f"plan must be None, 'auto', or ExecutionPlan; got "
+                    f"{type(plan).__name__}")
+
+
+def _default_mesh() -> jax.sharding.Mesh:
+    """All local devices on one axis — the TPU stand-in for the paper's
+    vault array (DESIGN.md §2: vault == mesh shard)."""
+    return compat.make_mesh((len(jax.devices()),), ("vault",))
+
+
+def derive_rp_shape(algorithm: str, shapes: tuple, iterations: int,
+                    ) -> dist_lib.RPShape:
+    """RPShape (paper Table 3) from the router's input shapes.
+
+    The votes tensor is (B, L, H, C_H) for both registered algorithms;
+    C_L is not recoverable from the votes (Eq.1 already consumed it), so
+    the C_H value is used for both — it only biases the E-terms' shared
+    prefactor, never the B/L/H ordering for a fixed shape.
+    """
+    B, L, H, C = shapes[0]
+    return dist_lib.RPShape(n_b=B, n_l=L, n_h=H, c_l=C, c_h=C,
+                            iters=iterations)
+
+
+def plan_axes(spec: RouterSpec, plan: ExecutionPlan,
+              shapes: tuple) -> Tuple[Tuple[str, str], ...]:
+    """Resolve an auto plan to concrete (dim, mesh_axis) pairs.
+
+    Feasible dims = the algorithm's shardable dims whose extent divides the
+    mesh axis size (GSPMD needs divisibility; the paper allows imbalanced
+    snippets).  Among those, argmax of the §5.1.2 execution score.  The
+    mesh's *first* axis hosts the distribution (the paper shards exactly
+    one dimension; multi-axis auto plans are future work — explicit
+    ``axes`` already supports them).
+    """
+    if spec.backend == "pallas":
+        # the fused kernel cannot insert cross-shard psums; the only
+        # feasible auto plan is unsharded execution (explicit sharded
+        # plans with this backend are rejected outright).
+        return ()
+    mesh = plan.mesh if plan.mesh is not None else _default_mesh()
+    axis = mesh.axis_names[0]
+    n = mesh.shape[axis]
+    algo = get_algorithm(spec.algorithm)
+    s = plan.rp_shape or derive_rp_shape(spec.algorithm, shapes,
+                                         spec.iterations)
+    # an explicit DeviceModel keeps its own operating point (e.g. the
+    # paper's 32-vault HMC); only the default model is sized to the mesh.
+    dev = plan.device or dist_lib.DeviceModel.tpu_v5e(n)
+    extents = {"B": s.n_b, "L": s.n_l, "H": s.n_h}
+    feasible = [d for d in algo.sharded_dims if extents[d] % n == 0]
+    if not feasible:
+        return ()
+    table = dist_lib.score_table(s, dev)
+    best = max(feasible, key=table.__getitem__)
+    return ((best, axis),)
+
+
+# ---------------------------------------------------------------------------
+# build_router
+# ---------------------------------------------------------------------------
+
+class Router:
+    """The callable built by ``build_router`` — also carries its spec/plan
+    and exposes ``resolve(*args)`` so callers can inspect the concrete
+    distribution an auto plan picked for given inputs."""
+
+    def __init__(self, spec: RouterSpec, plan: ExecutionPlan):
+        self.spec = spec
+        self.plan = plan
+        self.algorithm = get_algorithm(spec.algorithm)
+        self._cache: Dict[tuple, Callable] = {}
+        _validate(self.algorithm, spec, plan)
+
+    # -- plan resolution ----------------------------------------------------
+
+    def resolve(self, *args) -> Tuple[Tuple[str, str], ...]:
+        """Concrete (dim, mesh_axis) pairs for these inputs."""
+        return self._resolve_shapes(tuple(jnp.shape(a) for a in args))
+
+    def _resolve_shapes(self, shapes: tuple) -> Tuple[Tuple[str, str], ...]:
+        if not self.plan.auto:
+            return tuple(self.plan.axes)
+        return plan_axes(self.spec, self.plan, shapes)
+
+    def _mesh(self) -> jax.sharding.Mesh:
+        return self.plan.mesh if self.plan.mesh is not None \
+            else _default_mesh()
+
+    # -- executor construction ---------------------------------------------
+
+    def _core_fn(self, axes: Tuple[Tuple[str, str], ...]) -> Callable:
+        # invalid compositions (pallas backend or un-shardable dims with
+        # sharded axes) were rejected in _validate; auto plans only resolve
+        # to dims that pass the same filters (plan_axes).
+        algo, spec = self.algorithm, self.spec
+        ax = dict(axes)
+        if not axes:
+            return lambda *args: algo.run(args, spec, {})
+        return compat.shard_map(
+            lambda *args: algo.run(args, spec, ax),
+            self._mesh(), tuple(algo.in_specs(ax)), algo.out_specs(ax))
+
+    def _pipelined_fn(self, shapes: tuple, dtypes: tuple) -> Callable:
+        plan = self.plan
+        stage_a = plan.stage_a or (lambda x: x)
+        core = self._core_fn(())   # pipeline stages run unsharded cores
+        if plan.pipeline == "software":
+            return lambda micro: pipeline_lib.software_pipeline_scan(
+                stage_a, core, micro)
+        # two_stage: needs the hidden (stage_a output) ShapeDtypeStruct,
+        # derived by abstract evaluation of stage_a on one microbatch.
+        per_micro = jax.ShapeDtypeStruct(shapes[0][1:], dtypes[0])
+        hidden = jax.eval_shape(stage_a, per_micro)
+        return pipeline_lib.two_stage_pipeline(
+            stage_a, core, self._mesh(), plan.pipeline_axis, hidden)
+
+    def _executor(self, args) -> Callable:
+        shapes = tuple(jnp.shape(a) for a in args)
+        dtypes = tuple(jnp.result_type(a) for a in args)
+        key = (shapes, dtypes)
+        fn = self._cache.get(key)
+        if fn is None:
+            if self.plan.pipeline is not None:
+                fn = self._pipelined_fn(shapes, dtypes)
+            else:
+                fn = self._core_fn(self._resolve_shapes(shapes))
+            self._cache[key] = fn
+        return fn
+
+    def __call__(self, *args):
+        if (self.plan.pipeline is None
+                and len(args) != self.algorithm.num_inputs):
+            raise TypeError(
+                f"{self.spec.algorithm!r} router takes "
+                f"{self.algorithm.num_inputs} input(s) "
+                f"({self.algorithm.describe or 'see registry entry'}); "
+                f"got {len(args)}")
+        return self._executor(args)(*args)
+
+    def __repr__(self):
+        return (f"Router(algorithm={self.spec.algorithm!r}, "
+                f"backend={self.spec.backend!r}, "
+                f"plan={'auto' if self.plan.auto else self.plan.axes}, "
+                f"pipeline={self.plan.pipeline!r})")
+
+
+def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
+    if spec.backend not in BACKENDS:
+        raise ValueError(f"unknown backend {spec.backend!r}; expected one "
+                         f"of {BACKENDS}")
+    if spec.backend not in algo.backends:
+        raise ValueError(
+            f"algorithm {algo.name!r} has no {spec.backend!r} backend "
+            f"(supported: {algo.backends}); register a kernel for it or "
+            "use backend='jnp'")
+    if spec.backend == "pallas" and plan.axes:
+        raise ValueError(
+            "backend='pallas' cannot be combined with a sharded "
+            "ExecutionPlan: the fused kernel inserts no cross-shard psums "
+            "(paper Table-2 aggregations), so sharded execution would "
+            "silently return wrong results.  Use backend='jnp', or drop "
+            "the sharded dims.  (plan='auto' with this backend resolves "
+            "to unsharded execution.)")
+    bad = [d for d, _ in plan.axes if d not in algo.sharded_dims]
+    if bad:
+        raise ValueError(
+            f"algorithm {algo.name!r} cannot shard dims {bad} "
+            f"(shardable: {algo.sharded_dims})")
+    if plan.pipeline is not None:
+        if algo.name != "dynamic":
+            raise ValueError("pipelined plans currently support the "
+                             "'dynamic' algorithm only (single input/output "
+                             "stage)")
+        if plan.axes or plan.auto:
+            raise ValueError("pipeline plans and sharded/auto plans are "
+                             "alternatives — pick one (pipelining a sharded "
+                             "stage is future work)")
+        if plan.pipeline == "two_stage":
+            mesh = plan.mesh
+            if mesh is None or plan.pipeline_axis not in mesh.axis_names:
+                raise ValueError("pipeline='two_stage' needs a mesh "
+                                 f"containing axis {plan.pipeline_axis!r}")
+
+
+def build_router(spec: RouterSpec = RouterSpec(), plan=None) -> Router:
+    """One entry point: algorithm x backend x distribution plan -> callable.
+
+    spec: RouterSpec (or left default: unsharded exact dynamic routing).
+    plan: None (unsharded) | "auto" (§5.1.2 planner, default mesh) |
+          ExecutionPlan (explicit mesh/axes/pipeline/auto).
+
+    Returns a ``Router`` — call it like the underlying algorithm
+    (``router(u_hat)`` for dynamic, ``router(votes, a_in)`` for EM); with a
+    pipeline plan it consumes stacked microbatches ``(n_micro, ...)``.
+    """
+    return Router(spec, _normalize_plan(plan))
+
+
+def as_router(spec=None, plan=None, *, default_iterations: int = 3):
+    """Coerce the (spec, plan) surface of runtime entry points to a Router.
+
+    spec: None (default RouterSpec at ``default_iterations``), a RouterSpec,
+    or an already-built Router/callable — in which case ``plan`` must be
+    None (a built Router carries its ExecutionPlan).
+    """
+    if spec is None:
+        spec = RouterSpec(iterations=default_iterations)
+    if callable(spec) and not isinstance(spec, RouterSpec):
+        if plan is not None:
+            raise ValueError("pass plan only with a RouterSpec; a prebuilt "
+                             "Router already carries its ExecutionPlan")
+        return spec
+    return build_router(spec, plan)
+
+
+# ---------------------------------------------------------------------------
+# Legacy bridge (deprecation shims in core.routing / core.em_routing)
+# ---------------------------------------------------------------------------
+
+def from_routing_config(cfg: routing_lib.RoutingConfig,
+                        mesh: Optional[jax.sharding.Mesh] = None) -> Router:
+    """RoutingConfig -> Router (deprecation bridge, DESIGN.md §Shims)."""
+    spec = RouterSpec(algorithm="dynamic",
+                      backend="pallas" if cfg.fused else "jnp",
+                      iterations=cfg.iterations, use_approx=cfg.use_approx)
+    axes = tuple(cfg.axes or ())
+    if not axes and cfg.sharded_dim is not None:
+        axes = ((cfg.sharded_dim, cfg.axis_name),)
+    plan = ExecutionPlan(mesh=mesh, axes=axes) if axes else None
+    return build_router(spec, plan)

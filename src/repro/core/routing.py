@@ -26,7 +26,6 @@ the global aggregation) is what ``lax.psum`` of the locally-summed update does.
 """
 from __future__ import annotations
 
-import functools
 from typing import Literal, NamedTuple, Optional
 
 import jax
@@ -115,9 +114,18 @@ def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
     is the routed H-capsule output.
     """
     if cfg.fused:
+        if cfg.sharded_dim is not None or cfg.axes:
+            raise ValueError(
+                "fused=True (the Pallas backend) cannot run with sharded "
+                f"dims {cfg.axes or cfg.sharded_dim!r}: the fused kernel "
+                "performs no cross-shard psum insertion, so its result "
+                "would silently be wrong under shard_map.  Use the jnp "
+                "backend for sharded execution (RouterSpec(backend='jnp') "
+                "or RoutingConfig(fused=False)).")
         from repro.kernels.routing import ops as routing_ops
         return routing_ops.dynamic_routing_fused(
-            u_hat, iterations=cfg.iterations, use_approx=cfg.use_approx)
+            u_hat, iterations=cfg.iterations, use_approx=cfg.use_approx,
+            interpret=jax.default_backend() != "tpu")
 
     u_hat = u_hat.astype(jnp.float32)
     B, L, H, C = u_hat.shape
@@ -145,33 +153,26 @@ def dynamic_routing_with_stats(u_hat: jax.Array,
 
 def make_sharded_routing(mesh: jax.sharding.Mesh, dim: ShardedDim,
                          axis_name: str, cfg: RoutingConfig):
-    """Wrap dynamic_routing in shard_map with ``dim`` sharded over ``axis_name``.
+    """DEPRECATED shim — use ``repro.core.router.build_router`` instead.
 
-    This is the executable form of the paper's inter-vault distribution: the
-    returned callable takes a *global* u_hat and runs the RP with the chosen
-    dimension spread across the mesh axis (vaults), inserting exactly the
-    aggregation collectives the paper's M-term models (Eq.8/10/12).
+    Wraps dynamic_routing in shard_map with ``dim`` sharded over
+    ``axis_name``: the executable form of the paper's inter-vault
+    distribution.  Kept so pre-Router call sites keep working; delegates to
+    the unified Router API (DESIGN.md §Router, deprecation policy §Shims).
     """
     return make_multi_sharded_routing(mesh, ((dim, axis_name),), cfg)
 
 
 def make_multi_sharded_routing(mesh: jax.sharding.Mesh, axes, cfg):
-    """Beyond-paper generalization (§Perf): shard SEVERAL logical dims at
-    once, e.g. B over "data" x L over "model" on the pod's 2D torus —
-    aggregations localize to one mesh ring each instead of a global group.
+    """DEPRECATED shim — use ``repro.core.router.build_router`` instead.
 
-    axes: tuple of (dim, mesh_axis) pairs, dims from {"B", "L", "H"}.
+    Multi-dim generalization (e.g. B over "data" x L over "model" on the
+    pod's 2D torus).  axes: tuple of (dim, mesh_axis) pairs.
     """
-    P = jax.sharding.PartitionSpec
-    ax = dict(axes)
-    in_spec = P(ax.get("B"), ax.get("L"), ax.get("H"), None)
-    out_spec = P(ax.get("B"), ax.get("H"), None)
-    run_cfg = cfg._replace(axes=tuple(axes), sharded_dim=None,
-                           axis_name=None)
-
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(in_spec,),
-                       out_specs=out_spec, check_vma=False)
-    def routed(u_hat_local):
-        return dynamic_routing(u_hat_local, run_cfg)
-
-    return routed
+    from repro.core import router as router_lib
+    spec = router_lib.RouterSpec(
+        algorithm="dynamic",
+        backend="pallas" if cfg.fused else "jnp",
+        iterations=cfg.iterations, use_approx=cfg.use_approx)
+    plan = router_lib.ExecutionPlan(mesh=mesh, axes=tuple(axes))
+    return router_lib.build_router(spec, plan)

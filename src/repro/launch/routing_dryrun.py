@@ -32,11 +32,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
 from repro.core import distribution as D
 from repro.core import routing
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
 from repro.launch import hlo_analysis
 
 PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
@@ -46,17 +48,18 @@ POD_BATCH = 2048   # production batch: 256 chips x 8 inputs (paper BS=100
 
 
 def _mesh_1d(n):
-    return jax.make_mesh((n,), ("vault",), axis_types=(AxisType.Auto,))
+    return compat.make_mesh((n,), ("vault",))
 
 
 def _mesh_2d():
-    return jax.make_mesh((16, 16), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((16, 16), ("data", "model"))
 
 
 def lower_routing(mesh, axes, caps, batch, iters, use_approx=False):
-    rc = routing.RoutingConfig(iterations=iters, use_approx=use_approx)
-    routed = routing.make_multi_sharded_routing(mesh, axes, rc)
+    routed = build_router(
+        RouterSpec(algorithm="dynamic", iterations=iters,
+                   use_approx=use_approx),
+        ExecutionPlan(mesh=mesh, axes=tuple(axes)))
     ax = dict(axes)
     B, L, H, C = batch, caps.num_l_caps, caps.num_h_caps, caps.h_caps_dim
     spec = P(ax.get("B"), ax.get("L"), ax.get("H"), None)
@@ -188,9 +191,8 @@ def full_capsnet_cell(cfg_name: str, batch: int) -> dict:
         return jax.lax.pmean(out_loss, "vault"), metrics
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(), spec_img, spec_lbl), out_specs=P(),
-        check_vma=False)
+        compat.shard_map, mesh=mesh,
+        in_specs=(P(), spec_img, spec_lbl), out_specs=P())
     def train_step(params, images, labels):
         def scalar_loss(p):
             return local_loss(p, images, labels)[0]

@@ -12,9 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
 import repro.configs as C
+from repro import compat
 from repro.models import lm
 from repro.runtime import serve_loop, sharding as sh
 
@@ -32,8 +32,7 @@ def main():
     cfg = C.get_smoke_config(args.arch) if args.smoke \
         else C.get_config(args.arch)
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((n, 1), ("data", "model"))
     rules = sh.make_rules(cfg, mesh, "decode") if n > 1 else None
 
     key = jax.random.PRNGKey(0)

@@ -29,7 +29,9 @@ import time          # noqa: E402
 
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import compat                           # noqa: E402
 
 import repro.configs as C                          # noqa: E402
 from repro import checkpoint as ck                 # noqa: E402
@@ -47,11 +49,9 @@ def build_mesh(args) -> jax.sharding.Mesh:
     if args.mesh:
         shape = tuple(int(x) for x in args.mesh.split(","))
         names = ("pod", "data", "model")[-len(shape):]
-        return jax.make_mesh(shape, names,
-                             axis_types=(AxisType.Auto,) * len(shape))
+        return compat.make_mesh(shape, names)
     # default: all devices on "data", no TP (single-host dev loop)
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((n, 1), ("data", "model"))
 
 
 def main():

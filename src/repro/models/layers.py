@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 # ---------------------------------------------------------------------------
 # Logical-axis sharding rules
 # ---------------------------------------------------------------------------
@@ -346,13 +348,12 @@ def attention_decode(params: Mapping[str, jax.Array], x: jax.Array,
             return m_g, lax.psum(l * corr, cache_axis), \
                 lax.psum(acc * corr, cache_axis)
 
-        m, l, acc = jax.shard_map(
-            swept, mesh=mesh,
-            in_specs=(P(b_axes, None, None, None),
-                      P(b_axes, cache_axis, None, None),
-                      P(b_axes, cache_axis, None, None), P(None)),
-            out_specs=(P(b_axes, None, None, None),) * 3,
-            check_vma=False)(qg, cache_k, cache_v, pos)
+        m, l, acc = compat.shard_map(
+            swept, mesh,
+            (P(b_axes, None, None, None),
+             P(b_axes, cache_axis, None, None),
+             P(b_axes, cache_axis, None, None), P(None)),
+            (P(b_axes, None, None, None),) * 3)(qg, cache_k, cache_v, pos)
     else:
         m, l, acc = _decode_sweep(qg, cache_k, cache_v, pos, 0, scale=scale,
                                   rolling=rolling, s_total=S,
@@ -538,5 +539,5 @@ def sharded_softmax_xent(logits: jax.Array, labels: jax.Array,
     bdims = tuple(batch_spec)
     in_specs = (P(*bdims, None, vocab_axis), P(*bdims, None))
     out_specs = P(*bdims, None)
-    return jax.shard_map(local_loss, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_specs, check_vma=False)(logits, labels)
+    return compat.shard_map(local_loss, mesh, in_specs,
+                            out_specs)(logits, labels)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.layers import AxisRules, NO_RULES, init_linear
 
 
@@ -165,13 +166,12 @@ def moe_forward(params: Mapping[str, jax.Array], x: jax.Array,
         return _moe_local(x2d_l, router_w, wg, wu, wd, cfg,
                           expert_offset=off, axis_name=axis)
 
-    y, aux = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(P(batch_axes, None), P(None, None),
-                  P(axis, None, None), P(axis, None, None),
-                  P(axis, None, None)),
-        out_specs=(P(batch_axes, None), P()),
-        check_vma=False,
+    y, aux = compat.shard_map(
+        shard_fn, mesh,
+        (P(batch_axes, None), P(None, None),
+         P(axis, None, None), P(axis, None, None),
+         P(axis, None, None)),
+        (P(batch_axes, None), P()),
     )(x2d, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     return y.reshape(B, S, D), aux

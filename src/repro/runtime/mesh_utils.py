@@ -1,15 +1,20 @@
-"""Mesh construction helpers (Auto axis types pinned for GSPMD)."""
+"""Mesh construction helpers (Auto axis types pinned for GSPMD).
+
+``AxisType`` does not exist on older JAX releases; construction is delegated
+to ``repro.compat.make_mesh`` which guards the import and falls back to an
+explicit-mesh code path, so the same call works on both old and new JAX.
+"""
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> jax.sharding.Mesh:
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

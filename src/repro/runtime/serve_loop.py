@@ -1,7 +1,14 @@
-"""Batched serving loop: prefill + greedy decode with continuous slots.
+"""Batched serving loops.
 
-CPU-scale serving used by the examples; the same prefill/decode_step pair is
-what the dry-run lowers at production shapes.
+Two workloads share this module:
+
+  * LM serving — prefill + greedy decode with continuous slots (the
+    prefill/decode_step pair the dry-run lowers at production shapes).
+  * CapsNet classification serving — fixed-shape microbatched inference
+    through the unified Router API (``core.router.build_router``), the
+    paper's workload as a servable endpoint: requests are padded into a
+    constant batch shape so the routed forward compiles exactly once per
+    (spec, plan).
 """
 from __future__ import annotations
 
@@ -51,3 +58,58 @@ def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
         if eos_id is not None and bool(finished.all()):
             break
     return jnp.concatenate(outs, axis=1), stats
+
+
+# ---------------------------------------------------------------------------
+# CapsNet classification serving (paper workload, Router API)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CapsServeStats:
+    requests: int = 0
+    batches: int = 0
+    padded_waste: int = 0    # padding images computed and discarded
+
+
+def make_capsnet_classifier(params, caps_cfg, spec=None, plan=None,
+                            max_batch: int = 32):
+    """Build a classify(images) endpoint over the unified Router API.
+
+    spec/plan: forwarded to ``core.router.build_router`` (None -> exact
+    unsharded dynamic routing at ``caps_cfg.routing_iters``).  Requests are
+    chunked/padded to ``max_batch`` so only one executable is compiled.
+
+    Returns (classify, stats): classify(images (N,H,W,C)) -> (N,) int32
+    predicted classes; stats is updated in place per call.
+    """
+    from repro.core import router as router_lib
+    from repro.models import capsnet
+
+    router = router_lib.as_router(
+        spec, plan, default_iterations=caps_cfg.routing_iters)
+    stats = CapsServeStats()
+
+    @jax.jit
+    def _probs(p, images):
+        out = capsnet.forward(p, images, caps_cfg, router=router)
+        return out["class_probs"]
+
+    def classify(images) -> jax.Array:
+        images = jnp.asarray(images)
+        n = images.shape[0]
+        preds: List[jax.Array] = []
+        for lo in range(0, n, max_batch):
+            chunk = images[lo:lo + max_batch]
+            pad = max_batch - chunk.shape[0]
+            if pad:
+                chunk = jnp.concatenate(
+                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                                      chunk.dtype)])
+                stats.padded_waste += pad
+            probs = _probs(params, chunk)
+            preds.append(jnp.argmax(probs, axis=-1)[:max_batch - pad])
+            stats.batches += 1
+        stats.requests += n
+        return jnp.concatenate(preds) if preds else jnp.zeros((0,), jnp.int32)
+
+    return classify, stats

@@ -93,3 +93,44 @@ def make_train_step(cfg: lm.ArchConfig, rules: AxisRules = NO_RULES,
 def init_train_state(cfg: lm.ArchConfig, key):
     params = lm.init_params(cfg, key)
     return params, adamw_init(params)
+
+
+# ---------------------------------------------------------------------------
+# CapsNet training step (paper workload, Router API)
+# ---------------------------------------------------------------------------
+
+def make_capsnet_train_step(caps_cfg, spec=None, plan=None,
+                            opt_cfg: AdamWConfig = AdamWConfig(),
+                            max_grad_norm: float = 1.0,
+                            total_steps: int = 10_000, warmup: int = 100
+                            ) -> Callable:
+    """Build a jit-able CapsNet train step over the unified Router API.
+
+    spec/plan go to ``core.router.build_router`` (None -> exact unsharded
+    dynamic routing at ``caps_cfg.routing_iters``); the same AdamW + clip +
+    warmup-cosine machinery as the LM step.  Returned signature:
+        (params, opt_state, images, labels) -> (params, opt_state, metrics)
+    """
+    from repro.core import router as router_lib
+    from repro.models import capsnet
+
+    router = router_lib.as_router(
+        spec, plan, default_iterations=caps_cfg.routing_iters)
+
+    def loss_for(params, images, labels):
+        return capsnet.loss_fn(params, images, labels, caps_cfg,
+                               router=router)
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, images, labels):
+        (loss, metrics), grads = grad_fn(params, images, labels)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr_scale = linear_warmup_cosine(opt_state.step + 1, warmup,
+                                        total_steps)
+        params, opt_state = adamw_update(grads, opt_state, params, opt_cfg,
+                                         lr_scale)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr_scale": lr_scale, **metrics}
+
+    return train_step

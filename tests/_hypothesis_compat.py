@@ -1,0 +1,107 @@
+"""Minimal, dependency-free stand-in for the subset of ``hypothesis`` used
+by this test suite, for environments where hypothesis cannot be installed.
+
+Import pattern (each property-test module):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Semantics: ``@given`` reruns the test ``max_examples`` times with values
+drawn from a seeded NumPy generator — deterministic across runs (no
+shrinking, no example database; plain seeded property sampling).  The drawn
+arguments are appended to whatever pytest passes (fixtures work as long as
+strategy-bound parameters come last, which is how ``@given`` is used here).
+Supported strategies: integers, floats, booleans, sampled_from.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import numpy as np
+
+_SEED = 0x5EED
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw_fn, label):
+        self._draw_fn = draw_fn
+        self._label = label
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw_fn(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self._label})"
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        # hypothesis samples boundary values with elevated probability;
+        # cheap imitation: 10% of draws come from the interval endpoints.
+        def draw(rng):
+            if rng.random() < 0.1:
+                return float(min_value if rng.random() < 0.5 else max_value)
+            return float(rng.uniform(min_value, max_value))
+        return _Strategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))],
+            f"sampled_from({elements!r})")
+
+
+st = strategies
+
+
+def given(*pos_strategies, **kw_strategies):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_compat_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(_SEED)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in pos_strategies]
+                drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"property falsified on example {i}: "
+                        f"args={drawn or drawn_kw}") from e
+        wrapper._compat_given = True
+        # pytest resolves fixtures from the visible signature: hide the
+        # strategy-bound parameters (kw-bound names; rightmost positional
+        # slots), keeping any leading pytest fixtures.
+        params = [p for p in inspect.signature(fn).parameters.values()
+                  if p.name not in kw_strategies]
+        if pos_strategies:
+            params = params[:-len(pos_strategies)]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Accepts (and mostly ignores) the hypothesis settings surface."""
+    def decorate(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return decorate

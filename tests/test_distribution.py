@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # vendored fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import distribution as D
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS

@@ -1,0 +1,322 @@
+"""Unified Router API (core.router): registry dispatch, plan="auto" vs the
+offline §5.1.2 planner, backend parity, sharded-vs-unsharded equivalence,
+legacy-shim equivalence, and the error surface."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import distribution as D
+from repro.core import em_routing, routing
+from repro.core.router import (ExecutionPlan, RouterSpec, build_router,
+                               plan_axes, registered_algorithms)
+
+
+@pytest.fixture()
+def u_hat(key):
+    return jax.random.normal(key, (4, 32, 8, 16))
+
+
+@pytest.fixture()
+def em_inputs(key):
+    votes = jax.random.normal(key, (4, 32, 5, 8))
+    a_in = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (4, 32)))
+    return votes, a_in
+
+
+def test_registry_has_both_paper_algorithms():
+    assert set(registered_algorithms()) >= {"dynamic", "em"}
+
+
+def test_dispatch_dynamic_matches_legacy(u_hat):
+    """spec.algorithm='dynamic' == core.routing.dynamic_routing."""
+    router = build_router(RouterSpec(algorithm="dynamic", iterations=3))
+    want = routing.dynamic_routing(u_hat, routing.RoutingConfig(iterations=3))
+    np.testing.assert_allclose(np.asarray(router(u_hat)), np.asarray(want),
+                               rtol=1e-6)
+
+
+def test_dispatch_em_matches_legacy(em_inputs):
+    """spec.algorithm='em' == core.em_routing.em_routing (same registry,
+    different algorithm — the paper's §2.2 generality claim)."""
+    votes, a_in = em_inputs
+    router = build_router(RouterSpec(algorithm="em", iterations=3))
+    pose, act = router(votes, a_in)
+    pose_ref, act_ref = em_routing.em_routing(
+        votes, a_in, em_routing.EMRoutingConfig(iterations=3))
+    np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(act), np.asarray(act_ref),
+                               rtol=1e-6)
+
+
+def test_unknown_algorithm_and_backend_raise():
+    with pytest.raises(KeyError, match="unknown routing algorithm"):
+        build_router(RouterSpec(algorithm="quantum"))
+    with pytest.raises(ValueError, match="unknown backend"):
+        build_router(RouterSpec(backend="triton"))
+    with pytest.raises(ValueError, match="no 'pallas' backend"):
+        build_router(RouterSpec(algorithm="em", backend="pallas"))
+
+
+def test_unshardable_dim_rejected_at_build_time():
+    """EM + H-sharded plan fails at build_router, not at first call."""
+    mesh = compat.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match="cannot shard dims"):
+        build_router(RouterSpec(algorithm="em"),
+                     ExecutionPlan(mesh=mesh, axes=(("H", "x"),)))
+
+
+# ---------------------------------------------------------------------------
+# plan="auto" — the §5.1.2 planner closing into execution
+# ---------------------------------------------------------------------------
+
+def test_auto_plan_matches_offline_planner_table4():
+    """plan='auto' picks the same dimension as distribution.plan() at the
+    paper's Table-4 HMC operating point (Caps-MN1 shape)."""
+    s = D.RPShape(n_b=100, n_l=1152, n_h=10, c_l=8, c_h=16, iters=3)
+    hmc = D.DeviceModel.hmc()
+    router = build_router(
+        RouterSpec(iterations=s.iters),
+        ExecutionPlan(auto=True, device=hmc, rp_shape=s))
+    axes = router.resolve(jnp.zeros((s.n_b, s.n_l, s.n_h, s.c_h)))
+    assert len(axes) == 1
+    assert axes[0][0] == D.plan(s, hmc)
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in: plan_axes only reads axis_names/shape, and
+    the container has a single real device, so a 4-shard mesh can't be
+    constructed in-process."""
+    axis_names = ("vault",)
+    shape = {"vault": 4}
+
+
+def test_auto_plan_feasibility_filter():
+    """Auto never shards a dim whose extent doesn't divide the mesh axis."""
+    spec = RouterSpec(iterations=3)
+    # only B (=8) divides 4: L=6 and H=10 don't — auto must pick B no
+    # matter what the scores say
+    axes = plan_axes(spec, ExecutionPlan(mesh=_FakeMesh(), auto=True),
+                     ((8, 6, 10, 16),))
+    assert axes == (("B", "vault"),)
+    # nothing divides 4 -> unsharded
+    axes = plan_axes(spec, ExecutionPlan(mesh=_FakeMesh(), auto=True),
+                     ((6, 6, 10, 16),))
+    assert axes == ()
+    # 1-device mesh: everything divides; resolution is the pure argmax
+    mesh = compat.make_mesh((1,), ("vault",))
+    axes = plan_axes(spec, ExecutionPlan(mesh=mesh, auto=True),
+                     ((8, 32, 10, 16),))
+    assert len(axes) == 1 and axes[0][1] == "vault"
+
+
+def test_auto_plan_executes_and_matches_unsharded(u_hat):
+    router = build_router(RouterSpec(iterations=3), "auto")
+    want = routing.dynamic_routing(u_hat, routing.RoutingConfig(iterations=3))
+    np.testing.assert_allclose(np.asarray(router(u_hat)), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_auto_plan_em_avoids_h(em_inputs):
+    """EM cannot shard H; auto must resolve within {B, L}."""
+    votes, a_in = em_inputs
+    router = build_router(RouterSpec(algorithm="em"), "auto")
+    axes = router.resolve(votes, a_in)
+    assert all(d in ("B", "L") for d, _ in axes)
+    pose, act = router(votes, a_in)
+    pose_ref, act_ref = em_routing.em_routing(votes, a_in)
+    np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# backend parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_approx", [False, True])
+def test_jnp_vs_pallas_backend_parity(key, use_approx):
+    u_hat = jax.random.normal(key, (2, 32, 6, 8))
+    spec = RouterSpec(iterations=3, use_approx=use_approx)
+    v_jnp = build_router(spec)(u_hat)
+    v_pal = build_router(spec._replace(backend="pallas"))(u_hat)
+    np.testing.assert_allclose(np.asarray(v_jnp), np.asarray(v_pal),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_matches_prerefactor_fused_path(key):
+    from repro.kernels.routing import ops as rt_ops
+    u_hat = jax.random.normal(key, (2, 32, 6, 8))
+    v = build_router(RouterSpec(backend="pallas", iterations=3))(u_hat)
+    want = rt_ops.dynamic_routing_fused(u_hat, iterations=3)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sharded-vs-unsharded through build_router (1-device mesh in-process)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dim", ["B", "L", "H"])
+def test_sharded_equals_unsharded_1dev(u_hat, dim):
+    mesh = compat.make_mesh((1,), ("x",))
+    spec = RouterSpec(iterations=3)
+    want = build_router(spec)(u_hat)
+    got = build_router(spec, ExecutionPlan(mesh=mesh,
+                                           axes=((dim, "x"),)))(u_hat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_multi_dim_sharded_1dev(u_hat):
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    spec = RouterSpec(iterations=3)
+    want = build_router(spec)(u_hat)
+    got = build_router(
+        spec, ExecutionPlan(mesh=mesh, axes=(("B", "data"),
+                                             ("L", "model"))))(u_hat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_em_sharded_equals_unsharded_1dev(em_inputs):
+    votes, a_in = em_inputs
+    mesh = compat.make_mesh((1,), ("x",))
+    pose_ref, act_ref = em_routing.em_routing(votes, a_in)
+    for dim in ("B", "L"):
+        router = build_router(RouterSpec(algorithm="em"),
+                              ExecutionPlan(mesh=mesh, axes=((dim, "x"),)))
+        pose, act = router(votes, a_in)
+        np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(act), np.asarray(act_ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_router_is_jittable(u_hat):
+    router = build_router(RouterSpec(iterations=3))
+    want = router(u_hat)
+    got = jax.jit(router)(u_hat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pipeline plans
+# ---------------------------------------------------------------------------
+
+def test_software_pipeline_plan(key):
+    micro = jax.random.normal(key, (4, 2, 8, 4, 8))
+    spec = RouterSpec(iterations=3)
+    router = build_router(spec, ExecutionPlan(pipeline="software"))
+    got = router(micro)
+    core = build_router(spec)
+    want = jnp.stack([core(m) for m in micro])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pipeline_plan_rejects_sharded_combo():
+    mesh = compat.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match="alternatives"):
+        build_router(RouterSpec(),
+                     ExecutionPlan(mesh=mesh, axes=(("B", "x"),),
+                                   pipeline="software"))
+
+
+# ---------------------------------------------------------------------------
+# the pallas x sharded footgun (satellite fix) + legacy shims
+# ---------------------------------------------------------------------------
+
+def test_pallas_plus_sharded_raises_everywhere(u_hat):
+    mesh = compat.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match="pallas"):
+        build_router(RouterSpec(backend="pallas"),
+                     ExecutionPlan(mesh=mesh, axes=(("B", "x"),)))
+    # legacy path raises too (previously: silent wrong results)
+    with pytest.raises(ValueError, match="fused"):
+        routing.dynamic_routing(
+            u_hat, routing.RoutingConfig(fused=True, sharded_dim="B",
+                                         axis_name="x"))
+    with pytest.raises(ValueError, match="fused"):
+        routing.dynamic_routing(
+            u_hat, routing.RoutingConfig(fused=True, axes=(("L", "x"),)))
+
+
+def test_legacy_shims_delegate_to_router(u_hat, em_inputs):
+    """make_sharded_routing / make_sharded_em_routing still work and agree
+    with the pre-refactor semantics (they now build Routers internally)."""
+    mesh = compat.make_mesh((1,), ("x",))
+    cfg = routing.RoutingConfig(iterations=3)
+    want = routing.dynamic_routing(u_hat, cfg)
+    routed = routing.make_sharded_routing(mesh, "L", "x", cfg)
+    np.testing.assert_allclose(np.asarray(routed(u_hat)), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    routed2 = routing.make_multi_sharded_routing(
+        mesh, (("B", "x"),), cfg)
+    np.testing.assert_allclose(np.asarray(routed2(u_hat)), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    votes, a_in = em_inputs
+    pose_ref, act_ref = em_routing.em_routing(votes, a_in)
+    routed3 = em_routing.make_sharded_em_routing(mesh, "L", "x")
+    pose, act = routed3(votes, a_in)
+    np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# runtime entry points built on the Router
+# ---------------------------------------------------------------------------
+
+def test_capsnet_forward_router_kwarg(key):
+    from repro.configs.caps_benchmarks import smoke_caps
+    from repro.models import capsnet
+    cfg = smoke_caps()
+    params = capsnet.init_capsnet(key, cfg)
+    images = jax.random.uniform(jax.random.fold_in(key, 7),
+                                (2, cfg.image_hw, cfg.image_hw,
+                                 cfg.image_channels))
+    out_legacy = capsnet.forward(
+        params, images, cfg,
+        routing_cfg=routing.RoutingConfig(iterations=cfg.routing_iters))
+    out_router = capsnet.forward(
+        params, images, cfg,
+        router=build_router(RouterSpec(iterations=cfg.routing_iters)))
+    np.testing.assert_allclose(np.asarray(out_router["v"]),
+                               np.asarray(out_legacy["v"]), rtol=1e-6)
+
+
+def test_capsnet_serve_and_train_entry_points(key):
+    from repro.configs.caps_benchmarks import smoke_caps
+    from repro.models import capsnet
+    from repro.optim import adamw_init
+    from repro.runtime import serve_loop, train_loop
+    cfg = smoke_caps()
+    params = capsnet.init_capsnet(key, cfg)
+    images = jax.random.uniform(jax.random.fold_in(key, 3),
+                                (5, cfg.image_hw, cfg.image_hw,
+                                 cfg.image_channels))
+    # a prebuilt Router carries its plan — passing another is an error
+    with pytest.raises(ValueError, match="prebuilt Router"):
+        serve_loop.make_capsnet_classifier(
+            params, cfg, spec=build_router(RouterSpec()),
+            plan="auto")
+    with pytest.raises(ValueError, match="prebuilt Router"):
+        train_loop.make_capsnet_train_step(
+            cfg, spec=build_router(RouterSpec()), plan="auto")
+
+    classify, stats = serve_loop.make_capsnet_classifier(
+        params, cfg, max_batch=4)
+    preds = classify(images)
+    assert preds.shape == (5,) and stats.requests == 5
+    assert stats.batches == 2 and stats.padded_waste == 3
+
+    labels = jax.random.randint(jax.random.fold_in(key, 4), (4,), 0,
+                                cfg.num_h_caps)
+    step = jax.jit(train_loop.make_capsnet_train_step(cfg))
+    opt = adamw_init(params)
+    p2, opt2, metrics = step(params, opt, images[:4], labels)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    moved = any(bool(jnp.any(a != b)) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # vendored fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import em_routing, routing
 from repro.core.approx import exact_squash

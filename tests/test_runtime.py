@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # vendored fallback (tests/_hypothesis_compat.py)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro import checkpoint as ck
 from repro.data.synthetic import (SyntheticCapsDataset, SyntheticLMDataset,

@@ -25,24 +25,31 @@ def run_ok(script: str, timeout=420) -> str:
 
 def test_sharded_routing_all_dims():
     """Paper §5.1: B/L/H-sharded routing == unsharded, and the inserted
-    collective matches the dimension (Table 2 aggregation structure)."""
+    collective matches the dimension (Table 2 aggregation structure) —
+    through the unified Router API."""
     run_ok("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
-from repro.core import routing
-mesh = jax.make_mesh((8,), ('x',), axis_types=(AxisType.Auto,))
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
+from repro.runtime.mesh_utils import make_mesh
+mesh = make_mesh((8,), ('x',))
 key = jax.random.PRNGKey(0)
 u_hat = jax.random.normal(key, (8, 64, 8, 16))
-cfg = routing.RoutingConfig(iterations=3)
-want = routing.dynamic_routing(u_hat, cfg)
+spec = RouterSpec(algorithm='dynamic', iterations=3)
+want = build_router(spec)(u_hat)
 for dim in ('B', 'L', 'H'):
-    routed = routing.make_sharded_routing(mesh, dim, 'x', cfg)
+    routed = build_router(spec, ExecutionPlan(mesh=mesh, axes=((dim, 'x'),)))
     got = jax.jit(routed)(u_hat)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-5), dim
     # collective presence check in the lowered HLO
     txt = jax.jit(routed).lower(u_hat).compile().as_text()
     assert 'all-reduce' in txt or 'reduce-scatter' in txt, dim
+# plan='auto' resolves to a feasible dim and matches the unsharded result
+auto = build_router(spec, ExecutionPlan(mesh=mesh, auto=True))
+got = jax.jit(auto)(u_hat)
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           rtol=2e-4, atol=2e-5)
+assert auto.resolve(u_hat), 'auto plan should shard a dim on 8 devices'
 print('sharded routing OK')
 """)
 
@@ -50,9 +57,10 @@ print('sharded routing OK')
 def test_sharded_xent_and_flash_decode():
     run_ok("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 from repro.models import layers as L
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+from repro.runtime.mesh_utils import make_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 key = jax.random.PRNGKey(0)
 # vocab-sharded xent == dense
 logits = jax.random.normal(key, (4, 8, 64))
@@ -94,9 +102,9 @@ print('sharded xent + flash decode OK')
 def test_sharded_moe_dispatch():
     run_ok("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.models import layers as L, moe as moe_lib
-mesh = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+from repro.runtime.mesh_utils import make_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 rules = L.AxisRules(rules={'batch': 'data', 'experts': 'model'},
                     mesh=mesh, enabled=True)
 key = jax.random.PRNGKey(0)
@@ -128,9 +136,9 @@ def test_sharded_em_routing():
     the unsharded result."""
     run_ok("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import em_routing
-mesh = jax.make_mesh((8,), ('x',), axis_types=(AxisType.Auto,))
+from repro.runtime.mesh_utils import make_mesh
+mesh = make_mesh((8,), ('x',))
 key = jax.random.PRNGKey(0)
 votes = jax.random.normal(key, (8, 64, 4, 8))
 a_in = jax.nn.sigmoid(jax.random.normal(key, (8, 64)))
@@ -155,8 +163,9 @@ def test_elastic_resume_across_mesh_sizes(tmp_path):
     tmp_path = str(tmp_path)
     run_ok(f"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding
+from jax.sharding import NamedSharding
 import repro.configs as C
+from repro.runtime.mesh_utils import make_mesh
 from repro import checkpoint as ck
 from repro.models import lm
 from repro.optim import adamw_init
@@ -178,8 +187,8 @@ def run_steps(mesh, start, n, ckpt_dir):
     ck.save_checkpoint(ckpt_dir, start + n, params)
     return loss
 
-mesh_a = jax.make_mesh((2, 2), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
-mesh_b = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+mesh_a = make_mesh((2, 2), ('data', 'model'))
+mesh_b = make_mesh((2, 4), ('data', 'model'))
 l1 = run_steps(mesh_a, 0, 2, {tmp_path!r})
 l2 = run_steps(mesh_b, 2, 2, {tmp_path!r})   # resumed on a BIGGER mesh
 assert l2 < l1 + 0.5, (l1, l2)               # training continues sanely
@@ -190,9 +199,9 @@ print('elastic resume OK', l1, l2)
 def test_two_stage_pipeline():
     run_ok("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import pipeline
-mesh = jax.make_mesh((2, 4), ('pipe', 'x'), axis_types=(AxisType.Auto,)*2)
+from repro.runtime.mesh_utils import make_mesh
+mesh = make_mesh((2, 4), ('pipe', 'x'))
 stage_a = lambda x: x * 2.0 + 1.0
 stage_b = lambda h: h ** 2
 micro = jnp.arange(24, dtype=jnp.float32).reshape(6, 4)
@@ -231,10 +240,11 @@ def test_elastic_reshard_roundtrip(tmp_path):
     tmp_path = str(tmp_path)
     run_ok(f"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import checkpoint as ck
-mesh4 = jax.make_mesh((2, 2), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
-mesh8 = jax.make_mesh((2, 4), ('data', 'model'), axis_types=(AxisType.Auto,)*2)
+from repro.runtime.mesh_utils import make_mesh
+mesh4 = make_mesh((2, 2), ('data', 'model'))
+mesh8 = make_mesh((2, 4), ('data', 'model'))
 tree = {{'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
         'b': jnp.ones((8,), jnp.float32)}}
 sh4 = {{'w': NamedSharding(mesh4, P('data', 'model')),
