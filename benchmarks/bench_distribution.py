@@ -5,6 +5,12 @@ each Table-1 benchmark at the paper's three PE frequencies (312.5, 625,
 937.5 MHz) and prints the per-cell speedup of each dimension over the
 worst choice — the heat-map data of Fig.18, including the dimension-flip
 behaviour the paper highlights for Caps-SV3.
+
+Also cross-checks the Router's ``plan="auto"`` resolution against the
+offline planner for BOTH backends: since the sharded-fused path
+(DESIGN.md §Sharded-fused) landed, the planner may select a sharded
+execution for ``backend="pallas"`` too, so the sharded-fused arm asserts
+the pallas resolution agrees with the jnp one at every Fig.18 cell.
 """
 from __future__ import annotations
 
@@ -29,32 +35,59 @@ def run():
     return rows
 
 
+def planner_crosscheck():
+    """Router plan='auto' vs the offline planner, per backend.
+
+    Returns (mismatches, cells_checked).  The pallas entries are the
+    sharded-fused arm: a non-empty resolution there means plan='auto'
+    would execute stage-split Pallas kernels under shard_map."""
+    mismatches = []
+    cells = 0
+    for backend in ("jnp", "pallas"):
+        for f in FREQS_MHZ:
+            dev = D.DeviceModel.hmc(freq_hz=f * 1e6)
+            for name, cfg in CAPS_BENCHMARKS.items():
+                s = D.RPShape.from_caps_config(cfg)
+                axes = plan_axes(
+                    RouterSpec(iterations=s.iters, backend=backend),
+                    ExecutionPlan(auto=True, device=dev, rp_shape=s),
+                    ((s.n_b, s.n_l, s.n_h, s.c_h),))
+                cells += 1
+                if axes and axes[0][0] != D.plan(s, dev):
+                    mismatches.append((backend, f, name, axes,
+                                       D.plan(s, dev)))
+    return mismatches, cells
+
+
 def main():
+    grid = []
     print("freq_mhz,network,speedup_B,speedup_L,speedup_H,best_dim")
     best_by_net = {}
     for f, name, sp, best in run():
         print(f"{f},{name},{sp['B']:.2f},{sp['L']:.2f},{sp['H']:.2f},{best}")
         best_by_net.setdefault(name, []).append(best)
+        grid.append({"freq_mhz": f, "network": name,
+                     "speedup_B": sp["B"], "speedup_L": sp["L"],
+                     "speedup_H": sp["H"], "best_dim": best})
     flips = {n: v for n, v in best_by_net.items() if len(set(v)) > 1}
     print(f"# dimension choice flips with frequency for: "
           f"{sorted(flips) or 'none'} (paper Fig.18: choice is "
           f"config- and frequency-dependent)")
-    # cross-check: the Router's plan="auto" resolution agrees with the
-    # offline planner at every Fig.18 operating point (planner -> execution
-    # loop, closed through one API)
-    mismatches = []
-    for f in FREQS_MHZ:
-        dev = D.DeviceModel.hmc(freq_hz=f * 1e6)
-        for name, cfg in CAPS_BENCHMARKS.items():
-            s = D.RPShape.from_caps_config(cfg)
-            axes = plan_axes(RouterSpec(iterations=s.iters),
-                             ExecutionPlan(auto=True, device=dev,
-                                           rp_shape=s),
-                             ((s.n_b, s.n_l, s.n_h, s.c_h),))
-            if axes and axes[0][0] != D.plan(s, dev):
-                mismatches.append((f, name, axes, D.plan(s, dev)))
-    print(f"# Router plan='auto' vs offline planner: "
+    # planner -> execution loop, closed through one API — now for both
+    # backends (the pallas rows are the sharded-fused arm)
+    mismatches, cells = planner_crosscheck()
+    print(f"# Router plan='auto' vs offline planner "
+          f"({cells} cells x jnp+pallas/sharded-fused): "
           f"{'MISMATCH ' + repr(mismatches) if mismatches else 'agree on all cells'}")
+    return {"paper_artifact": "Fig.18",
+            "config": {"freqs_mhz": list(FREQS_MHZ),
+                       "networks": sorted(CAPS_BENCHMARKS)},
+            "grid": grid,
+            "dimension_flips": sorted(flips),
+            "planner_crosscheck": {"cells": cells,
+                                   "backends": ["jnp", "pallas"],
+                                   "mismatches": [list(map(str, m))
+                                                  for m in mismatches]}}
 
 
 if __name__ == "__main__":

@@ -50,6 +50,12 @@ def main(n_micro: int = 4, batch: int = 8):
     print(f"# outputs identical: {ok}; overlap benefit requires 2 device "
           f"groups (paper Fig.8) — see tests/test_sharded.py::"
           f"test_two_stage_pipeline")
+    return {"paper_artifact": "Fig.8/§6.3",
+            "config": {"n_micro": n_micro, "batch": batch,
+                       "network": cfg.name},
+            "sequential": {"median_s": t_s},
+            "pipelined": {"median_s": t_p},
+            "outputs_identical": ok}
 
 
 if __name__ == "__main__":

@@ -1,16 +1,22 @@
 """Paper Fig.15/16 — RP acceleration: naive baseline vs fused-kernel vs
 distribution-planned execution.
 
-Two complementary measurements:
+Three complementary measurements:
 
 (1) MEASURED (this container, CPU): the naive RP (materialise every
     intermediate — the paper's GPU-pathology baseline) vs the optimised
-    single-pass schedule through the unified Router API (jnp backend; the
-    Pallas backend's interpret mode is pure-python and not a meaningful
-    wall-clock subject on CPU) — the memory-traffic ratio the kernel
-    eliminates.
+    single-pass schedule through the unified Router API (jnp backend) —
+    the memory-traffic ratio the kernel eliminates.
 
-(2) MODELED (paper Table-4 operating points): the analytical execution-time
+(2) MEASURED, sharded-fused arm: the same networks through
+    ``RouterSpec(backend="pallas")`` composed with an L-sharded
+    ExecutionPlan (DESIGN.md §Sharded-fused) — the in-vault PE chain split
+    at the Table-2 aggregation points.  On this container the mesh has one
+    device and the Pallas stages run in interpret mode, so the wall-clock
+    is a correctness/plumbing record, not a perf claim; the perf claim is
+    the DMA model (kernels/routing/ops.py::dma_bytes_per_call).
+
+(3) MODELED (paper Table-4 operating points): the analytical execution-time
     model S⁻¹ = αE + βM (core.distribution) evaluated with the paper's HMC
     coefficients vs a GPU-baseline model (same FLOP count over P100
     FLOP/s + HBM traffic over 732GB/s), per Table-1 benchmark — the
@@ -21,10 +27,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_call
+from benchmarks import common
+from benchmarks.common import time_stats
+from repro import compat
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
 from repro.core import distribution as D
-from repro.core.router import RouterSpec, build_router
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
 
 # P100 operating point for the modeled GPU baseline (paper Table 4)
 P100_FLOPS = 9.5e12          # FP32
@@ -36,21 +44,34 @@ P100_HBM = 732e9             # bytes/s
 NAIVE_TRAFFIC_FACTOR = 4.0
 FUSED_TRAFFIC_FACTOR = 1.0   # stream u_hat once (kernel design)
 
+# (name, B, L, H, C, iters) — smoke sizes for the CI artifact check
+SMOKE_SHAPES = [("smoke", 2, 64, 6, 8, 2)]
+
+
+def _measure_shapes(batch: int):
+    if common.smoke():
+        return SMOKE_SHAPES
+    return [(name, batch, cfg.num_l_caps, cfg.num_h_caps, cfg.h_caps_dim,
+             cfg.routing_iters)
+            for name, cfg in CAPS_BENCHMARKS.items()
+            if name in ("Caps-MN1", "Caps-EN3", "Caps-SV1")]
+
 
 def measured_speedups(batch: int = 2):
-    """CPU-measured naive vs fused-schedule RP step times."""
+    """CPU-measured naive vs routed RP step times, incl. the sharded-fused
+    (pallas x L-sharded plan) arm."""
+    reps = 2 if common.smoke() else 5
+    mesh = compat.make_mesh((len(jax.devices()),), ("vault",))
     rows = []
-    for name in ("Caps-MN1", "Caps-EN3", "Caps-SV1"):
-        cfg = CAPS_BENCHMARKS[name]
+    for name, B, L, H, C, iters in _measure_shapes(batch):
         key = jax.random.PRNGKey(0)
-        u_hat = jax.random.normal(
-            key, (batch, cfg.num_l_caps, cfg.num_h_caps, cfg.h_caps_dim))
+        u_hat = jax.random.normal(key, (B, L, H, C))
 
         def naive(uh):
             # eager Algorithm-1: two u_hat sweeps/iter + explicit products
-            b = jnp.zeros((cfg.num_l_caps, cfg.num_h_caps))
+            b = jnp.zeros((L, H))
             v = None
-            for _ in range(cfg.routing_iters):
+            for _ in range(iters):
                 c = jax.nn.softmax(b, -1)
                 weighted = uh * c[None, :, :, None]       # materialised
                 s = weighted.sum(1)
@@ -62,14 +83,28 @@ def measured_speedups(batch: int = 2):
 
         # the optimised schedule through the unified Router API (jnp
         # backend: scan-based single-pass routing, no materialised
-        # intermediates; the Pallas backend's interpret mode is pure
-        # python and not a meaningful wall-clock subject on CPU)
+        # intermediates)
         router = build_router(RouterSpec(algorithm="dynamic",
-                                         iterations=cfg.routing_iters))
+                                         iterations=iters))
+        # sharded-fused arm: pallas backend x L-sharded ExecutionPlan
+        # (stage-split kernels + cross-shard psum; interpret mode on CPU)
+        sharded_fused = build_router(
+            RouterSpec(algorithm="dynamic", backend="pallas",
+                       iterations=iters),
+            ExecutionPlan(mesh=mesh, axes=(("L", "vault"),)))
 
-        t_n = time_call(jax.jit(naive), u_hat)
-        t_f = time_call(jax.jit(lambda uh: router(uh)), u_hat)
-        rows.append((name, t_n, t_f, t_n / t_f))
+        t_n = time_stats(jax.jit(naive), u_hat, iters=reps)
+        t_f = time_stats(jax.jit(lambda uh: router(uh)), u_hat, iters=reps)
+        t_sf = time_stats(jax.jit(lambda uh: sharded_fused(uh)), u_hat,
+                          iters=reps)
+        rows.append({"network": name,
+                     "shape": {"B": B, "L": L, "H": H, "C": C,
+                               "iters": iters},
+                     "naive": t_n, "router_jnp": t_f,
+                     "sharded_fused": t_sf,
+                     "speedup": t_n["median_s"] / t_f["median_s"],
+                     "sharded_fused_speedup":
+                         t_n["median_s"] / t_sf["median_s"]})
     return rows
 
 
@@ -102,28 +137,47 @@ def modeled_speedups():
         t_pim = max(FUSED_TRAFFIC_FACTOR * s.iters * u_hat_bytes
                     / HMC_INTERNAL_BW,
                     D.comm_M(dim, s, hmc.n_vault) / HMC_XBAR_BW)
-        rows.append((name, dim, t_gpu, t_pim, t_gpu / t_pim))
+        rows.append({"network": name, "chosen_dim": dim,
+                     "gpu_model_s": t_gpu, "pim_model_s": t_pim,
+                     "speedup": t_gpu / t_pim})
     return rows
 
 
 def main():
-    print("== measured (CPU): naive vs fused RP schedule ==")
-    print("network,naive_s,fused_s,speedup")
-    for name, tn, tf, sp in measured_speedups():
-        print(f"{name},{tn:.4f},{tf:.4f},{sp:.2f}")
+    measured = measured_speedups()
+    print("== measured (CPU): naive vs routed RP schedule ==")
+    print("network,naive_s,router_jnp_s,sharded_fused_s,speedup,"
+          "sharded_fused_speedup")
+    for r in measured:
+        print(f"{r['network']},{r['naive']['median_s']:.4f},"
+              f"{r['router_jnp']['median_s']:.4f},"
+              f"{r['sharded_fused']['median_s']:.4f},"
+              f"{r['speedup']:.2f},{r['sharded_fused_speedup']:.2f}")
     print("# (CPU wall-time is a weak proxy — XLA CPU fuses the naive "
-          "form too; the traffic claim is the kernel DMA model, "
+          "form too, and the sharded-fused arm runs Pallas in interpret "
+          "mode; the traffic claim is the kernel DMA model, "
           "kernels/routing/ops.py::dma_bytes_per_call)")
     print()
+    modeled = modeled_speedups()
     print("== modeled (paper Table-4 coefficients): GPU vs PIM RP ==")
     print("network,chosen_dim,gpu_model_s,pim_model_s,speedup")
     sps = []
-    for name, dim, tg, tp, sp in modeled_speedups():
-        print(f"{name},{dim},{tg:.5f},{tp:.5f},{sp:.2f}")
-        sps.append(sp)
-    print(f"# geomean modeled RP speedup: "
-          f"{(jnp.prod(jnp.array(sps)) ** (1 / len(sps))):.2f} "
+    for r in modeled:
+        print(f"{r['network']},{r['chosen_dim']},{r['gpu_model_s']:.5f},"
+              f"{r['pim_model_s']:.5f},{r['speedup']:.2f}")
+        sps.append(r["speedup"])
+    geomean = float(jnp.prod(jnp.array(sps)) ** (1 / len(sps)))
+    print(f"# geomean modeled RP speedup: {geomean:.2f} "
           f"(paper Fig.15: 2.17x avg)")
+    return {"paper_artifact": "Fig.15/16",
+            "config": {"device": jax.default_backend(),
+                       "n_devices": len(jax.devices()),
+                       "sharded_fused_plan": [["L", "vault"]],
+                       "pallas_interpret":
+                           jax.default_backend() != "tpu"},
+            "measured": measured,
+            "modeled": modeled,
+            "geomean_modeled_speedup": geomean}
 
 
 if __name__ == "__main__":

@@ -28,9 +28,12 @@ SWEEP = [
 
 
 def main():
+    from benchmarks import common
     hmc = D.DeviceModel.hmc()
+    sweep = SWEEP[:2] if common.smoke() else SWEEP
+    recs = []
     print("size,n_l,n_h,iters,modeled_speedup,measured_fused_ratio")
-    for name, nl, nh, iters in SWEEP:
+    for name, nl, nh, iters in sweep:
         s = D.RPShape(n_b=100, n_l=nl, n_h=nh, c_l=8, c_h=16, iters=iters)
         dim = D.plan(s, hmc)
         t_pim = D.estimated_time_s(dim, s, hmc)
@@ -59,8 +62,16 @@ def main():
             jax.jit(lambda uh: rt_ref.dynamic_routing_ref(uh, iters)),
             u_hat, iters=3)
         print(f"{name},{nl},{nh},{iters},{modeled:.2f},{t_n / t_f:.2f}")
+        recs.append({"size": name, "n_l": nl, "n_h": nh, "iters": iters,
+                     "modeled_speedup": modeled,
+                     "measured_fused_ratio": t_n / t_f,
+                     "naive": {"median_s": t_n},
+                     "fused_schedule": {"median_s": t_f}})
     print("# paper §6.2.1: speedup grows with network size "
           "(2.09x SV1 -> 2.27x EN3)")
+    return {"paper_artifact": "§6.2.1",
+            "config": {"n_b": 100, "c_l": 8, "c_h": 16},
+            "sweep": recs}
 
 
 if __name__ == "__main__":

@@ -1,6 +1,11 @@
 """Shared benchmark utilities: wall-clock timing on the host CPU (relative
 comparisons only) + the paper's analytical HMC/GPU models for the absolute
-Fig.15/17 numbers the container cannot measure."""
+Fig.15/17 numbers the container cannot measure.
+
+``SMOKE`` is set by ``benchmarks.run --smoke``: benches shrink shapes and
+iteration counts to CI-smoke size (seconds, not minutes) while still
+producing a schema-complete BENCH_<name>.json artifact.
+"""
 from __future__ import annotations
 
 import time
@@ -8,9 +13,17 @@ from typing import Callable
 
 import jax
 
+# Toggled by benchmarks.run --smoke before bench mains execute.
+SMOKE = False
 
-def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall-clock seconds of fn(*args) (block_until_ready)."""
+
+def smoke() -> bool:
+    return SMOKE
+
+
+def time_stats(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> dict:
+    """Wall-clock stats of fn(*args) (block_until_ready):
+    {"median_s", "p90_s", "n"} — the fields every BENCH_*.json carries."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -19,7 +32,13 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2]
+    p90_idx = min(len(ts) - 1, int(round(0.9 * (len(ts) - 1))))
+    return {"median_s": ts[len(ts) // 2], "p90_s": ts[p90_idx], "n": iters}
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-clock seconds of fn(*args) (block_until_ready)."""
+    return time_stats(fn, *args, warmup=warmup, iters=iters)["median_s"]
 
 
 def row(name: str, us_per_call: float, derived: str = "") -> str:

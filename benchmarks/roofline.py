@@ -139,6 +139,11 @@ def main(out_dir: str = "results/dryrun"):
               f"{c['mesh']} = {c['collective_s']:.1f}s "
               f"({c['collective_s'] / max(c['compute_s'], 1e-12):.1f}x "
               f"compute)")
+    return {"paper_artifact": "(repro) §Roofline",
+            "config": {"records_dir": out_dir, "n_records": len(recs),
+                       "peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                       "ici_bw": ICI_BW},
+            "cells": rows}
 
 
 if __name__ == "__main__":

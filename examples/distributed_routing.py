@@ -44,6 +44,17 @@ def main():
         print(f"  {dim}-sharded: max err vs unsharded {err:.2e}; "
               f"collectives in HLO: {colls}")
 
+    # sharded-fused (DESIGN.md §Sharded-fused): the same sharded plans with
+    # the Pallas backend — per-shard stage-split kernels, cross-shard psums
+    # at the Table-2 aggregation points (both paper mechanisms at once)
+    for dim in ("B", "L", "H"):
+        routed = build_router(
+            spec._replace(backend="pallas"),
+            ExecutionPlan(mesh=mesh, axes=((dim, "vault"),)))
+        v = jax.jit(routed)(u_hat)
+        print(f"  {dim}-sharded fused (pallas): max err vs unsharded "
+              f"{float(jnp.abs(v - v_ref).max()):.2e}")
+
     # beyond-paper: 2D distribution on a (2, n/2) torus — one ExecutionPlan,
     # two sharded dims
     mesh2 = compat.make_mesh((2, n_dev // 2), ("data", "model"))
@@ -75,6 +86,12 @@ def main():
     print(f"  EM L-sharded: max pose err "
           f"{float(jnp.abs(pose - em_ref[0]).max()):.2e}, "
           f"max act err {float(jnp.abs(act - em_ref[1]).max()):.2e}")
+    em_sf = build_router(RouterSpec(algorithm="em", backend="pallas"),
+                         ExecutionPlan(mesh=mesh, axes=(("L", "vault"),)))
+    pose_sf, act_sf = jax.jit(em_sf)(votes, a_in)
+    print(f"  EM L-sharded fused (pallas): max pose err "
+          f"{float(jnp.abs(pose_sf - em_ref[0]).max()):.2e}, "
+          f"max act err {float(jnp.abs(act_sf - em_ref[1]).max()):.2e}")
 
 
 if __name__ == "__main__":

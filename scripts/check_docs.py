@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Docs cross-reference check (scripts/ci.sh):
+
+every DESIGN.md section cited from a ``src/repro`` docstring/comment —
+``DESIGN.md §<token>`` — must exist as a ``## §<token>`` heading in
+DESIGN.md.  (Bare ``§5.1.2``-style references cite the *paper*, not
+DESIGN.md, and are out of scope.)
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+CITE_RE = re.compile(r"DESIGN\.md §([A-Za-z0-9-]+)")
+HEADING_RE = re.compile(r"^## §([A-Za-z0-9-]+)", re.MULTILINE)
+
+
+def main() -> int:
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = set(HEADING_RE.findall(design))
+    missing = []
+    for path in sorted((ROOT / "src" / "repro").rglob("*.py")):
+        for lineno, line in enumerate(path.read_text().splitlines(), 1):
+            for token in CITE_RE.findall(line):
+                if token not in sections:
+                    missing.append((path.relative_to(ROOT), lineno, token))
+    if missing:
+        print("DESIGN.md sections cited but not defined:")
+        for path, lineno, token in missing:
+            print(f"  {path}:{lineno}: §{token}")
+        print(f"defined sections: {sorted(sections)}")
+        return 1
+    print(f"docs check OK: all DESIGN.md § citations in src/repro resolve "
+          f"({len(sections)} sections defined)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,8 @@
 #!/usr/bin/env bash
-# CI entry point: tier-1 tests + example smoke runs.
+# CI entry point: tier-1 tests + docs check + example/bench smoke runs.
 #
 #   scripts/ci.sh            # full tier-1 + smoke
-#   scripts/ci.sh --fast     # tier-1 only
+#   scripts/ci.sh --fast     # tier-1 + docs check only
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,9 +10,30 @@ echo "== tier-1: pytest =="
 # pythonpath comes from pyproject.toml [tool.pytest.ini_options]
 python -m pytest -x -q
 
+echo "== docs: DESIGN.md section cross-references =="
+python scripts/check_docs.py
+
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
   PYTHONPATH=src python examples/quickstart.py
+
+  echo "== smoke: benchmarks.run --smoke --only rp_speedup (JSON artifact) =="
+  PYTHONPATH=src python -m benchmarks.run --smoke --only rp_speedup
+  PYTHONPATH=src python - <<'EOF'
+import json, sys
+d = json.load(open("BENCH_rp_speedup.json"))
+for key in ("bench", "smoke", "config", "measured", "modeled",
+            "geomean_modeled_speedup"):
+    assert key in d, f"BENCH_rp_speedup.json missing {key!r}"
+assert d["bench"] == "rp_speedup"
+arms = d["measured"]
+assert arms, "no measured rows"
+for row in arms:
+    for arm in ("naive", "router_jnp", "sharded_fused"):
+        assert row[arm]["median_s"] > 0, (arm, row)
+print("BENCH_rp_speedup.json OK:", len(arms), "measured row(s),",
+      "sharded-fused arm present")
+EOF
 fi
 
 echo "CI OK"

@@ -16,7 +16,10 @@ Three orthogonal choices compose:
     [Sabour et al. 2017] or "em" [Hinton et al. 2018], both over the common
     (B, L, H, C) vote layout) and a kernel backend ("jnp" | "pallas"; the
     Pallas backend replaces the old ``RoutingConfig.fused`` bool and runs
-    the fused-iteration kernel, in interpret mode off-TPU).
+    the fused-iteration kernel, in interpret mode off-TPU).  With a sharded
+    plan the Pallas backend switches to the stage-split sharded-fused form:
+    per-shard Pallas stages with cross-shard psums at the paper's Table-2
+    aggregation points (DESIGN.md §Sharded-fused).
   * ExecutionPlan — WHERE/HOW to run it: unsharded, one dim sharded over a
     mesh axis (the paper's inter-vault distribution), several dims at once
     (2D torus), or the paper's §4 host||PIM two-stage pipeline.  With
@@ -58,7 +61,8 @@ class RouterSpec(NamedTuple):
 
     algorithm: registry name ("dynamic" | "em" | user-registered).
     backend:   "jnp" (pure-XLA path) or "pallas" (fused-iteration kernel;
-               replaces the old ``RoutingConfig.fused`` bool).
+               replaces the old ``RoutingConfig.fused`` bool; composes with
+               sharded plans via the stage-split sharded-fused form).
     options:   algorithm-specific extras as a sorted (name, value) tuple,
                e.g. (("beta_a", 1.0),) for EM.  Use ``spec.option(name)``.
     """
@@ -141,6 +145,13 @@ def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
     (u_hat,) = args
     if spec.backend == "pallas":
         from repro.kernels.routing import ops as routing_ops
+        if axes:
+            # sharded-fused: stage-split kernels + cross-shard psums at
+            # the Table-2 aggregation points (DESIGN.md §Sharded-fused)
+            return routing_ops.dynamic_routing_fused_sharded(
+                u_hat, axes=axes, iterations=spec.iterations,
+                use_approx=spec.use_approx,
+                interpret=_pallas_interpret_mode())
         return routing_ops.dynamic_routing_fused(
             u_hat, iterations=spec.iterations, use_approx=spec.use_approx,
             interpret=_pallas_interpret_mode())
@@ -165,6 +176,15 @@ DYNAMIC = register_algorithm(Algorithm(
 
 def _em_run(args, spec: RouterSpec, axes: Mapping[str, str]):
     votes, a_in = args
+    if spec.backend == "pallas":
+        from repro.kernels.routing import ops as routing_ops
+        return routing_ops.em_routing_fused(
+            votes, a_in, axes=axes, iterations=spec.iterations,
+            beta_a=spec.option("beta_a", 1.0),
+            beta_u=spec.option("beta_u", 1.0),
+            inv_temp=spec.option("inv_temp", 1.0),
+            eps=spec.option("eps", 1e-9),
+            interpret=_pallas_interpret_mode())
     cfg = em_lib.EMRoutingConfig(
         iterations=spec.iterations,
         beta_a=spec.option("beta_a", 1.0),
@@ -186,7 +206,7 @@ EM = register_algorithm(Algorithm(
     out_specs=lambda ax: (P(ax.get("B"), None, None), P(ax.get("B"), None)),
     # H-sharding would split the per-H Gaussian statistics.
     sharded_dims=("B", "L"),
-    backends=("jnp",),
+    backends=("jnp", "pallas"),
     num_inputs=2,
     describe="EM routing: votes (B,L,H,C) + a_in (B,L) -> (pose, a_out)",
 ))
@@ -289,11 +309,6 @@ def plan_axes(spec: RouterSpec, plan: ExecutionPlan,
     one dimension; multi-axis auto plans are future work — explicit
     ``axes`` already supports them).
     """
-    if spec.backend == "pallas":
-        # the fused kernel cannot insert cross-shard psums; the only
-        # feasible auto plan is unsharded execution (explicit sharded
-        # plans with this backend are rejected outright).
-        return ()
     mesh = plan.mesh if plan.mesh is not None else _default_mesh()
     axis = mesh.axis_names[0]
     n = mesh.shape[axis]
@@ -346,9 +361,11 @@ class Router:
     # -- executor construction ---------------------------------------------
 
     def _core_fn(self, axes: Tuple[Tuple[str, str], ...]) -> Callable:
-        # invalid compositions (pallas backend or un-shardable dims with
-        # sharded axes) were rejected in _validate; auto plans only resolve
-        # to dims that pass the same filters (plan_axes).
+        # invalid compositions (un-shardable dims with sharded axes) were
+        # rejected in _validate; auto plans only resolve to dims that pass
+        # the same filters (plan_axes).  Both backends are sharding-aware:
+        # the jnp path and the pallas stage-split path insert the Table-2
+        # psums themselves from the ``axes`` mapping.
         algo, spec = self.algorithm, self.spec
         ax = dict(axes)
         if not axes:
@@ -410,14 +427,6 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             f"algorithm {algo.name!r} has no {spec.backend!r} backend "
             f"(supported: {algo.backends}); register a kernel for it or "
             "use backend='jnp'")
-    if spec.backend == "pallas" and plan.axes:
-        raise ValueError(
-            "backend='pallas' cannot be combined with a sharded "
-            "ExecutionPlan: the fused kernel inserts no cross-shard psums "
-            "(paper Table-2 aggregations), so sharded execution would "
-            "silently return wrong results.  Use backend='jnp', or drop "
-            "the sharded dims.  (plan='auto' with this backend resolves "
-            "to unsharded execution.)")
     bad = [d for d, _ in plan.axes if d not in algo.sharded_dims]
     if bad:
         raise ValueError(

@@ -48,8 +48,11 @@ class RoutingConfig(NamedTuple):
                   {"B": axis, "L": axis, ...} shards several logical dims at
                   once (e.g. B over "data" x L over "model" on the 2D
                   torus); overrides sharded_dim/axis_name when set.
-    fused:        route via the Pallas fused-iteration kernel where available
-                  (kernels/routing); pure-jnp path otherwise.
+    fused:        route via the Pallas kernels (kernels/routing); pure-jnp
+                  path otherwise.  Composes with sharded_dim/axes: the
+                  stage-split sharded-fused form inserts the cross-shard
+                  psums between per-shard Pallas stages (DESIGN.md
+                  §Sharded-fused).
     """
     iterations: int = 3
     use_approx: bool = False
@@ -114,18 +117,22 @@ def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
     is the routed H-capsule output.
     """
     if cfg.fused:
-        if cfg.sharded_dim is not None or cfg.axes:
-            raise ValueError(
-                "fused=True (the Pallas backend) cannot run with sharded "
-                f"dims {cfg.axes or cfg.sharded_dim!r}: the fused kernel "
-                "performs no cross-shard psum insertion, so its result "
-                "would silently be wrong under shard_map.  Use the jnp "
-                "backend for sharded execution (RouterSpec(backend='jnp') "
-                "or RoutingConfig(fused=False)).")
         from repro.kernels.routing import ops as routing_ops
+        interpret = jax.default_backend() != "tpu"
+        axes = dict(cfg.axes or ())
+        if not axes and cfg.sharded_dim is not None:
+            axes = {cfg.sharded_dim: cfg.axis_name}
+        if axes:
+            # sharded-fused (DESIGN.md §Sharded-fused): stage-split kernels
+            # with the Table-2 psums inserted on the ambient mesh axes.
+            # (Historically this raised — the single-pass fused kernel
+            # cannot insert cross-shard psums.)
+            return routing_ops.dynamic_routing_fused_sharded(
+                u_hat, axes=axes, iterations=cfg.iterations,
+                use_approx=cfg.use_approx, interpret=interpret)
         return routing_ops.dynamic_routing_fused(
             u_hat, iterations=cfg.iterations, use_approx=cfg.use_approx,
-            interpret=jax.default_backend() != "tpu")
+            interpret=interpret)
 
     u_hat = u_hat.astype(jnp.float32)
     B, L, H, C = u_hat.shape

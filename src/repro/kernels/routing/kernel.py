@@ -35,8 +35,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-from repro.core.approx import (EXP_AVG, EXP_RECOVERY, LOG2E, RECIP_RECOVERY,
-                               _F32_BIAS, _F32_MANT)
+from repro.core.approx import (EXP_AVG, EXP_RECOVERY, INV_SQRT_RECOVERY,
+                               LOG2E, RECIP_RECOVERY, _F32_BIAS, _F32_MANT)
 
 
 def _fast_exp_inkernel(x):
@@ -51,6 +51,24 @@ def _fast_recip_inkernel(x):
     y = lax.bitcast_convert_type(i, jnp.float32)
     y = y * (2.0 - x * y)
     return y * jnp.float32(RECIP_RECOVERY)
+
+
+def _fast_rsqrt_inkernel(x):
+    i = jnp.int32(0x5F3759DF) - (lax.bitcast_convert_type(x, jnp.int32) >> 1)
+    y = lax.bitcast_convert_type(i, jnp.float32)
+    y = y * (1.5 - 0.5 * x * y * y)
+    return y * jnp.float32(INV_SQRT_RECOVERY)
+
+
+def _squash_inkernel(s, use_approx: bool):
+    """Eq.3 squash over the trailing C dim, mirroring approx.exact_squash /
+    approx.approx_squash so backend parity holds for both modes."""
+    if use_approx:
+        n2 = jnp.sum(s * s, axis=-1, keepdims=True) + 1e-9
+        return s * (n2 * _fast_rsqrt_inkernel(n2)
+                    * _fast_recip_inkernel(1.0 + n2))
+    n2 = jnp.sum(s * s, axis=-1, keepdims=True)
+    return s * (n2 / (1.0 + n2)) / jnp.sqrt(n2 + 1e-9)
 
 
 def _routing_iter_kernel(u_ref, b_ref, v_ref, s_ref, b_out_ref, *,
@@ -128,3 +146,231 @@ def routing_iteration_fused(u_hat: jax.Array, b: jax.Array, v_prev: jax.Array,
     )(u_hat.astype(jnp.float32), b.astype(jnp.float32),
       v_prev.astype(jnp.float32))
     return s, b_new
+
+
+# ---------------------------------------------------------------------------
+# Stage-split kernels — sharded-fused routing (DESIGN.md §Sharded-fused)
+# ---------------------------------------------------------------------------
+# The single-pass lazy-update kernel above assumes every Table-2 aggregation
+# is shard-local.  Under an inter-vault distribution (a sharded
+# ExecutionPlan) the iteration must surface at the aggregation points so the
+# host can insert the cross-shard ``lax.psum``:
+#
+#     c  = softmax(b)         host (O(L·H), psum-aware when H is sharded)
+#     s  = Σ_l c·û            STAGE 1 (pallas)   -> psum over L's axis
+#     v  = squash(s)          STAGE 2 (pallas)
+#     db = Σ_k û·v            STAGE 2 (pallas)   -> psum over B's axis
+#
+# Each stage streams the only large operand (û) HBM→VMEM exactly once and
+# keeps its O(B·L·H·C) intermediates (c·û products, agreement terms)
+# VMEM-resident — the in-vault PE chain, split exactly where the paper's
+# inter-vault aggregations happen.  Cost vs the fused kernel: û crosses the
+# memory boundary twice per iteration instead of once; that is the price of
+# distribution, not an implementation artifact (the paper's vaults pay the
+# crossbar traffic M at the same points).
+
+
+def _stage_votes_kernel(u_ref, c_ref, s_ref):
+    """STAGE 1, one grid step = one L tile: s_partial[k,h,c] += Σ_l c·û.
+
+    u_ref: (B, L_t, H, C) û tile (streamed, read once)
+    c_ref: (L_t, H) coupling coefficients (Eq.5, computed on the host)
+    s_ref: (B, H, C) partial vote-sums, accumulated across grid steps
+    """
+    u = u_ref[...].astype(jnp.float32)
+    c = c_ref[...]
+    s_part = jnp.sum(u * c[None, :, :, None], axis=1)        # (B, H, C)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = s_part
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        s_ref[...] += s_part
+
+
+def _stage_update_kernel(u_ref, s_ref, v_ref, db_ref, *, use_approx: bool):
+    """STAGE 2, one grid step = one L tile: squash + logit update.
+
+    u_ref:  (B, L_t, H, C) û tile (streamed, read once)
+    s_ref:  (B, H, C) complete vote-sums (post cross-shard psum)
+    v_ref:  (B, H, C) squashed output (written at step 0; same block
+            every step)
+    db_ref: (L_t, H) partial logit updates db[l,h] = Σ_{k,c} û·v
+    """
+    u = u_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    v = _squash_inkernel(s, use_approx)          # O(B·H·C): recomputed per
+                                                 # tile to stay VMEM-resident
+
+    @pl.when(pl.program_id(0) == 0)
+    def _write_v():
+        v_ref[...] = v
+
+    db_ref[...] = jnp.sum(u * v[:, None], axis=(0, 3))       # (L_t, H)
+
+
+@functools.partial(jax.jit, static_argnames=("l_tile", "interpret"))
+def routing_stage_votes(u_hat: jax.Array, c: jax.Array, *, l_tile: int = 128,
+                        interpret: bool = True):
+    """STAGE 1 wrapper: (û (B,L,H,C), c (L,H)) -> s_partial (B,H,C)."""
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    return pl.pallas_call(
+        _stage_votes_kernel,
+        grid=(L // l_tile,),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+        interpret=interpret,
+    )(u_hat.astype(jnp.float32), c.astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l_tile", "use_approx", "interpret"))
+def routing_stage_update(u_hat: jax.Array, s: jax.Array, *, l_tile: int = 128,
+                         use_approx: bool = False, interpret: bool = True):
+    """STAGE 2 wrapper: (û (B,L,H,C), s (B,H,C)) -> (v (B,H,C), db (L,H))."""
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    kernel = functools.partial(_stage_update_kernel, use_approx=use_approx)
+    return pl.pallas_call(
+        kernel,
+        grid=(L // l_tile,),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+            jax.ShapeDtypeStruct((L, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u_hat.astype(jnp.float32), s.astype(jnp.float32))
+
+
+# --- EM routing stage kernels (same Table-2 structure: the M-step
+# --- aggregates over L, the E-step's softmax is over H) ---------------------
+
+
+def _em_stats_kernel(v_ref, r_ref, a_ref, rsum_ref, rv_ref, rv2_ref):
+    """EM M-step sufficient statistics, one grid step = one L tile.
+
+    v_ref: (B, L_t, H, C) votes tile (streamed, read once)
+    r_ref: (B, L_t, H) responsibilities tile
+    a_ref: (B, L_t) input-capsule activations tile
+    rsum_ref: (B, H)    Σ_l r·a                  (accumulated)
+    rv_ref:   (B, H, C) Σ_l r·a·votes            (accumulated)
+    rv2_ref:  (B, H, C) Σ_l r·a·votes²           (accumulated)
+
+    The naive M-step materialises diff² = (votes-μ)² — a second full-size
+    tensor — because it needs μ first.  Streaming the *sufficient
+    statistics* (Σrw, Σrw·v, Σrw·v²) instead lets one û-sized pass serve
+    both μ and σ² (σ² = E[v²] - μ² form, recombined on the host after the
+    cross-shard psum).
+    """
+    v = v_ref[...].astype(jnp.float32)
+    r = r_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    rw = r * a[..., None]                                    # (B, L_t, H)
+    rsum_p = jnp.sum(rw, axis=1)                             # (B, H)
+    rv_p = jnp.sum(rw[..., None] * v, axis=1)                # (B, H, C)
+    rv2_p = jnp.sum(rw[..., None] * (v * v), axis=1)         # (B, H, C)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        rsum_ref[...] = rsum_p
+        rv_ref[...] = rv_p
+        rv2_ref[...] = rv2_p
+
+    @pl.when(pl.program_id(0) != 0)
+    def _acc():
+        rsum_ref[...] += rsum_p
+        rv_ref[...] += rv_p
+        rv2_ref[...] += rv2_p
+
+
+def _em_estep_kernel(v_ref, mu_ref, isig_ref, bias_ref, r_ref):
+    """EM E-step, one grid step = one L tile: responsibilities.
+
+    v_ref:    (B, L_t, H, C) votes tile (streamed, read once)
+    mu_ref:   (B, H, C) component means
+    isig_ref: (B, H, C) 1/σ² (host precomputes the reciprocal so the
+              kernel is MAC-only, like the paper's PE datapath)
+    bias_ref: (B, H) log a_out - ½ Σ_c log(2πσ²) (host-precomputed)
+    r_ref:    (B, L_t, H) output responsibilities (softmax over H; H is
+              fully resident — EM never shards H)
+    """
+    v = v_ref[...].astype(jnp.float32)
+    mu = mu_ref[...]
+    isig = isig_ref[...]
+    bias = bias_ref[...]
+    d = v - mu[:, None]                                      # (B, L_t, H, C)
+    logits = bias[:, None] - 0.5 * jnp.sum(d * d * isig[:, None], axis=-1)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    r_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("l_tile", "interpret"))
+def em_stage_stats(votes: jax.Array, r: jax.Array, a_in: jax.Array, *,
+                   l_tile: int = 128, interpret: bool = True):
+    """EM M-step stats: -> (Σrw (B,H), Σrw·v (B,H,C), Σrw·v² (B,H,C))."""
+    B, L, H, C = votes.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    return pl.pallas_call(
+        _em_stats_kernel,
+        grid=(L // l_tile,),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((B, l_tile, H), lambda i: (0, i, 0)),
+            pl.BlockSpec((B, l_tile), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H), lambda i: (0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(votes.astype(jnp.float32), r.astype(jnp.float32),
+      a_in.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("l_tile", "interpret"))
+def em_stage_estep(votes: jax.Array, mu: jax.Array, inv_sigma2: jax.Array,
+                   bias: jax.Array, *, l_tile: int = 128,
+                   interpret: bool = True):
+    """EM E-step: -> responsibilities r (B, L, H)."""
+    B, L, H, C = votes.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    return pl.pallas_call(
+        _em_estep_kernel,
+        grid=(L // l_tile,),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((B, H), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, l_tile, H), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H), jnp.float32),
+        interpret=interpret,
+    )(votes.astype(jnp.float32), mu.astype(jnp.float32),
+      inv_sigma2.astype(jnp.float32), bias.astype(jnp.float32))

@@ -1,13 +1,32 @@
-"""Jitted public wrapper for the fused routing kernel."""
+"""Jitted public wrappers for the fused routing kernels.
+
+Two execution shapes (DESIGN.md §Sharded-fused):
+
+* ``dynamic_routing_fused`` — the single-pass lazy-update kernel; every
+  Table-2 aggregation is shard-local, so it only runs unsharded.
+* ``dynamic_routing_fused_sharded`` / ``em_routing_fused`` — the stage-split
+  form: per-shard Pallas stages compute the heavy O(B·L·H·C) passes, and
+  this module inserts the cross-shard ``lax.psum`` between them at exactly
+  the paper's inter-vault aggregation points.  Both run inside a
+  ``shard_map`` body (the Router's ``_core_fn``) or any enclosing ambient
+  mesh axes; with no sharded axes the psums are identity and the stage-split
+  form is algebraically identical to the fused kernel.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core import routing as routing_lib
 from repro.kernels.routing import ref
-from repro.kernels.routing.kernel import routing_iteration_fused
+from repro.kernels.routing.kernel import (em_stage_estep, em_stage_stats,
+                                          routing_iteration_fused,
+                                          routing_stage_update,
+                                          routing_stage_votes)
 
 
 def _pick_l_tile(L: int, bytes_budget: int, row_bytes: int,
@@ -66,3 +85,116 @@ def dynamic_routing_fused(u_hat: jax.Array, *, iterations: int = 3,
                                        interpret=interpret)
         v = ref.squash(s, use_approx)
     return v
+
+
+# ---------------------------------------------------------------------------
+# Sharded-fused routing (DESIGN.md §Sharded-fused)
+# ---------------------------------------------------------------------------
+
+def _softmax_h(b: jax.Array, h_axis: Optional[str],
+               use_approx: bool) -> jax.Array:
+    """Eq.5 softmax over H of b:(L,H), cross-shard when H is sharded.
+
+    O(L·H) — negligible next to the O(B·L·H·C) Pallas stages, so it runs
+    on the host between them, through the same psum-aware implementation
+    as the jnp backend (exact parity by construction)."""
+    cfg = routing_lib.RoutingConfig(
+        use_approx=use_approx,
+        axes=(("H", h_axis),) if h_axis is not None else None)
+    return routing_lib._softmax(b, cfg)
+
+
+def _psum_if(x: jax.Array, axis_name: Optional[str]) -> jax.Array:
+    return lax.psum(x, axis_name) if axis_name is not None else x
+
+
+def dynamic_routing_fused_sharded(u_hat: jax.Array, *,
+                                  axes: Mapping[str, str],
+                                  iterations: int = 3,
+                                  use_approx: bool = False,
+                                  l_tile: int | None = None,
+                                  interpret: bool = True) -> jax.Array:
+    """Stage-split fused routing with cross-shard aggregation (Table 2).
+
+    u_hat: the *per-shard* (B, L, H, C) block — this function runs inside a
+    ``shard_map`` body (or under ambient mesh axes).  ``axes`` maps each
+    sharded logical dim ("B" | "L" | "H") to its mesh axis name; the
+    matching psum is inserted at the paper's inter-vault aggregation point:
+
+        shard L -> psum of the partial vote-sums s   (after STAGE 1)
+        shard B -> psum of the logit updates db      (after STAGE 2)
+        shard H -> psum inside the softmax denominator (host, O(L·H))
+
+    Per iteration û crosses HBM→VMEM twice (once per stage) instead of the
+    unsharded kernel's once — the distribution cost the paper pays as
+    crossbar traffic M.  Returns v (B_local, H_local, C).
+    """
+    u_hat = u_hat.astype(jnp.float32)
+    B, L, H, C = u_hat.shape
+    if l_tile is None:
+        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+    b = jnp.zeros((L, H), jnp.float32)
+    v = jnp.zeros((B, H, C), jnp.float32)
+    for _ in range(iterations):
+        c = _softmax_h(b, axes.get("H"), use_approx)               # Eq.5
+        s = routing_stage_votes(u_hat, c, l_tile=l_tile,
+                                interpret=interpret)               # Eq.2
+        s = _psum_if(s, axes.get("L"))
+        v, db = routing_stage_update(u_hat, s, l_tile=l_tile,
+                                     use_approx=use_approx,
+                                     interpret=interpret)          # Eq.3+4
+        b = b + _psum_if(db, axes.get("B"))
+    return v
+
+
+def em_routing_fused(votes: jax.Array, a_in: jax.Array, *,
+                     axes: Mapping[str, str],
+                     iterations: int = 3, beta_a: float = 1.0,
+                     beta_u: float = 1.0, inv_temp: float = 1.0,
+                     eps: float = 1e-9, l_tile: int | None = None,
+                     interpret: bool = True):
+    """EM routing via the stage-split Pallas kernels (paper §2.2 generality).
+
+    votes: per-shard (B, L, H, C); a_in: per-shard (B, L).  ``axes`` maps
+    sharded dims to mesh axes — "L" psums the M-step sufficient statistics
+    (the Table-2 aggregation); "B" shards are fully independent (EM keeps
+    no cross-batch state, so no collective is needed); H is rejected by the
+    Router (per-H Gaussian statistics cannot split).
+
+    σ² is recombined from streamed sufficient statistics
+    (Σrw·v² - 2μ·Σrw·v + μ²·Σrw — one votes pass instead of the naive
+    two with a materialised (votes-μ)² tensor), clamped at 0 before the
+    +eps floor against catastrophic cancellation.  Matches
+    ``core.em_routing.em_routing`` to float tolerance.
+
+    Returns (pose μ (B, H, C), a_out (B, H)).
+    """
+    votes = votes.astype(jnp.float32)
+    B, L, H, C = votes.shape
+    if l_tile is None:
+        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+    l_axis = axes.get("L")
+    r = jnp.full((B, L, H), 1.0 / H, jnp.float32)
+    mu = jnp.zeros((B, H, C), jnp.float32)
+    a_out = jnp.zeros((B, H), jnp.float32)
+    for it in range(iterations):
+        lam = inv_temp * (1.0 - 0.95 ** (it + 1))
+        # ---- M-step: one streamed pass + cross-shard psum over L ----
+        rsum_raw, rv, rv2 = em_stage_stats(votes, r, a_in, l_tile=l_tile,
+                                           interpret=interpret)
+        rsum_raw = _psum_if(rsum_raw, l_axis)
+        rv = _psum_if(rv, l_axis)
+        rv2 = _psum_if(rv2, l_axis)
+        r_sum = rsum_raw + eps                                  # (B, H)
+        mu = rv / r_sum[..., None]
+        var = rv2 - 2.0 * mu * rv + jnp.square(mu) * rsum_raw[..., None]
+        sigma2 = jnp.maximum(var, 0.0) / r_sum[..., None] + eps
+        cost = (beta_u + 0.5 * jnp.log(sigma2)) * r_sum[..., None]
+        a_out = jax.nn.sigmoid(lam * (beta_a - jnp.sum(cost, axis=-1)))
+        # ---- E-step: host precomputes the Gaussian constants so the
+        # ---- kernel pass is MAC-only ----
+        bias = jnp.log(a_out + eps) - 0.5 * jnp.sum(
+            jnp.log(2.0 * jnp.pi * sigma2), axis=-1)            # (B, H)
+        r = em_stage_estep(votes, mu, 1.0 / sigma2, bias, l_tile=l_tile,
+                           interpret=interpret)
+    return mu, a_out

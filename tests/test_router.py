@@ -9,8 +9,9 @@ import pytest
 from repro import compat
 from repro.core import distribution as D
 from repro.core import em_routing, routing
-from repro.core.router import (ExecutionPlan, RouterSpec, build_router,
-                               plan_axes, registered_algorithms)
+from repro.core.router import (Algorithm, ExecutionPlan, RouterSpec,
+                               build_router, plan_axes, register_algorithm,
+                               registered_algorithms)
 
 
 @pytest.fixture()
@@ -57,8 +58,18 @@ def test_unknown_algorithm_and_backend_raise():
         build_router(RouterSpec(algorithm="quantum"))
     with pytest.raises(ValueError, match="unknown backend"):
         build_router(RouterSpec(backend="triton"))
-    with pytest.raises(ValueError, match="no 'pallas' backend"):
-        build_router(RouterSpec(algorithm="em", backend="pallas"))
+    # an algorithm that registers no pallas kernel still fails loudly
+    from repro.core import router as router_mod
+    register_algorithm(Algorithm(
+        name="_jnp_only",
+        run=lambda args, spec, axes: args[0],
+        in_specs=lambda ax: (jax.sharding.PartitionSpec(),),
+        out_specs=lambda ax: jax.sharding.PartitionSpec()))
+    try:
+        with pytest.raises(ValueError, match="no 'pallas' backend"):
+            build_router(RouterSpec(algorithm="_jnp_only", backend="pallas"))
+    finally:
+        del router_mod._REGISTRY["_jnp_only"]
 
 
 def test_unshardable_dim_rejected_at_build_time():
@@ -225,22 +236,106 @@ def test_pipeline_plan_rejects_sharded_combo():
 
 
 # ---------------------------------------------------------------------------
-# the pallas x sharded footgun (satellite fix) + legacy shims
+# sharded-fused: pallas backend x sharded ExecutionPlan (DESIGN.md
+# §Sharded-fused) — stage-split kernels + Table-2 psums
 # ---------------------------------------------------------------------------
 
-def test_pallas_plus_sharded_raises_everywhere(u_hat):
+@pytest.mark.parametrize("dim", ["B", "L", "H"])
+def test_sharded_fused_dynamic_matches_jnp_1dev(u_hat, dim):
+    """pallas + sharded plan no longer raises; matches the unsharded jnp
+    backend to <=1e-5 for every shardable dim (acceptance criterion)."""
     mesh = compat.make_mesh((1,), ("x",))
-    with pytest.raises(ValueError, match="pallas"):
-        build_router(RouterSpec(backend="pallas"),
-                     ExecutionPlan(mesh=mesh, axes=(("B", "x"),)))
-    # legacy path raises too (previously: silent wrong results)
-    with pytest.raises(ValueError, match="fused"):
-        routing.dynamic_routing(
-            u_hat, routing.RoutingConfig(fused=True, sharded_dim="B",
-                                         axis_name="x"))
-    with pytest.raises(ValueError, match="fused"):
-        routing.dynamic_routing(
-            u_hat, routing.RoutingConfig(fused=True, axes=(("L", "x"),)))
+    want = build_router(RouterSpec(iterations=3))(u_hat)
+    got = build_router(
+        RouterSpec(backend="pallas", iterations=3),
+        ExecutionPlan(mesh=mesh, axes=((dim, "x"),)))(u_hat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("use_approx", [False, True])
+def test_sharded_fused_dynamic_torus(u_hat, use_approx):
+    """2D-torus plan (B x L) through the stage-split pallas path."""
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    spec = RouterSpec(iterations=3, use_approx=use_approx)
+    want = build_router(spec)(u_hat)
+    got = build_router(
+        spec._replace(backend="pallas"),
+        ExecutionPlan(mesh=mesh, axes=(("B", "data"),
+                                       ("L", "model"))))(u_hat)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_fused_em_matches_jnp_1dev(em_inputs):
+    """EM pallas backend: unsharded + B/L-sharded all match the jnp path."""
+    votes, a_in = em_inputs
+    mesh = compat.make_mesh((1,), ("x",))
+    pose_ref, act_ref = em_routing.em_routing(votes, a_in)
+    plans = [None,
+             ExecutionPlan(mesh=mesh, axes=(("B", "x"),)),
+             ExecutionPlan(mesh=mesh, axes=(("L", "x"),))]
+    for plan in plans:
+        router = build_router(RouterSpec(algorithm="em", backend="pallas"),
+                              plan)
+        pose, act = router(votes, a_in)
+        np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(act), np.asarray(act_ref),
+                                   rtol=1e-4, atol=1e-5)
+    # em + H-sharded stays invalid (per-H Gaussian statistics)
+    with pytest.raises(ValueError, match="cannot shard dims"):
+        build_router(RouterSpec(algorithm="em", backend="pallas"),
+                     ExecutionPlan(mesh=mesh, axes=(("H", "x"),)))
+
+
+def test_auto_plan_may_pick_sharded_fused():
+    """plan='auto' + pallas resolves to a *sharded* execution (regression:
+    plan_axes used to force () for the pallas backend) and resolve()
+    reports it."""
+    spec = RouterSpec(backend="pallas", iterations=3)
+    axes = plan_axes(spec, ExecutionPlan(mesh=_FakeMesh(), auto=True),
+                     ((8, 128, 10, 16),))
+    assert axes == (("B", "vault"),) or (len(axes) == 1
+                                         and axes[0][1] == "vault")
+    router = build_router(spec, "auto")
+    u = jax.random.normal(jax.random.PRNGKey(0), (4, 32, 8, 16))
+    reported = router.resolve(u)
+    assert len(reported) == 1 and reported[0][0] in ("B", "L", "H")
+    want = build_router(RouterSpec(iterations=3))(u)
+    np.testing.assert_allclose(np.asarray(router(u)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_legacy_fused_sharded_delegates(u_hat):
+    """RoutingConfig(fused=True) + sharded dims now runs the sharded-fused
+    path through the legacy shims (previously a ValueError)."""
+    mesh = compat.make_mesh((1,), ("x",))
+    want = routing.dynamic_routing(u_hat, routing.RoutingConfig(iterations=3))
+    cfg = routing.RoutingConfig(iterations=3, fused=True)
+    routed = routing.make_sharded_routing(mesh, "L", "x", cfg)
+    np.testing.assert_allclose(np.asarray(routed(u_hat)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    pose_ref, act_ref = em_routing.em_routing(*_em_like(u_hat))
+    votes, a_in = _em_like(u_hat)
+    routed_em = em_routing.make_sharded_em_routing(mesh, "L", "x",
+                                                   backend="pallas")
+    pose, act = routed_em(votes, a_in)
+    np.testing.assert_allclose(np.asarray(pose), np.asarray(pose_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _em_like(u_hat):
+    key = jax.random.PRNGKey(7)
+    votes = jax.random.normal(key, (4, 32, 5, 8))
+    a_in = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (4, 32)))
+    return votes, a_in
+
+
+# ---------------------------------------------------------------------------
+# legacy shims
+# ---------------------------------------------------------------------------
 
 
 def test_legacy_shims_delegate_to_router(u_hat, em_inputs):
