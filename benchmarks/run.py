@@ -17,6 +17,7 @@ the perf trajectory survives the run.
 | accuracy         | Table 5 — approximation ± recovery accuracy        |
 | scaling          | §6.2.1 — speedup vs network size                   |
 | pipeline         | Fig.8/§6.3 — host||PIM pipelined execution         |
+| serving          | Fig.8 served end-to-end — load sweep, 2 arms       |
 | roofline         | (this repro) §Roofline terms from the dry-run      |
 """
 from __future__ import annotations
@@ -29,7 +30,7 @@ import time
 import traceback
 
 BENCHES = ("layer_breakdown", "rp_speedup", "distribution", "accuracy",
-           "scaling", "pipeline", "roofline")
+           "scaling", "pipeline", "serving", "roofline")
 
 
 def write_artifact(name: str, payload: dict, smoke: bool) -> str:

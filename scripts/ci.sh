@@ -17,9 +17,18 @@ if [[ "${1:-}" != "--fast" ]]; then
   echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
   PYTHONPATH=src python examples/quickstart.py
 
+  # Smoke benches run in a scratch cwd: benchmarks/run.py writes
+  # BENCH_<name>.json to the current directory, and the repo-root copies
+  # are the *tracked full-measurement* artifacts — a smoke run must never
+  # clobber them.
+  ROOT="$(pwd)"
+  SMOKE_DIR="$(mktemp -d)"
+  trap 'rm -rf "$SMOKE_DIR"' EXIT
+  cd "$SMOKE_DIR"
+
   echo "== smoke: benchmarks.run --smoke --only rp_speedup (JSON artifact) =="
-  PYTHONPATH=src python -m benchmarks.run --smoke --only rp_speedup
-  PYTHONPATH=src python - <<'EOF'
+  PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only rp_speedup
+  python - <<'EOF'
 import json, sys
 d = json.load(open("BENCH_rp_speedup.json"))
 for key in ("bench", "smoke", "config", "measured", "modeled",
@@ -33,6 +42,31 @@ for row in arms:
         assert row[arm]["median_s"] > 0, (arm, row)
 print("BENCH_rp_speedup.json OK:", len(arms), "measured row(s),",
       "sharded-fused arm present")
+EOF
+
+  echo "== smoke: repro.launch.serve_caps --smoke (continuous batching) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke
+
+  echo "== smoke: benchmarks.run --smoke --only serving (JSON artifact) =="
+  PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only serving
+  python - <<'EOF'
+import json
+d = json.load(open("BENCH_serving.json"))
+for key in ("bench", "smoke", "config", "arms", "offered_loads",
+            "outputs_identical", "max_abs_prob_delta"):
+    assert key in d, f"BENCH_serving.json missing {key!r}"
+assert d["bench"] == "serving"
+assert d["outputs_identical"], d["max_abs_prob_delta"]
+assert len(d["offered_loads"]) >= 2, d["offered_loads"]
+for arm in ("pipelined", "unpipelined"):
+    cells = d["arms"][arm]
+    assert len(cells) >= 2, (arm, cells)
+    for c in cells:
+        assert c["latency"]["median_s"] > 0, (arm, c)
+        assert c["latency"]["p90_s"] > 0, (arm, c)
+        assert c["throughput_rps"] > 0, (arm, c)
+print("BENCH_serving.json OK: both arms,",
+      len(d["offered_loads"]), "offered-load points")
 EOF
 fi
 

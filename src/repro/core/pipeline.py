@@ -16,11 +16,20 @@ Two entry points:
                                  a skewed ``lax.scan`` (XLA overlaps the
                                  independent stage ops; used on 1-axis meshes
                                  and in tests).
+
+Both accept *pytrees* of stacked microbatches (every leaf shaped
+``(n_micro, ...)``) so stages can consume auxiliary per-lane operands — the
+serving path (DESIGN.md §Serving) threads a padding mask next to the images
+this way.  ``two_stage_pipeline`` additionally composes with a routing stage
+that is itself sharded over a *second* mesh axis (the paper's §5.1
+inter-vault distribution running inside the §4 pipeline's PIM stage): pass
+``in_spec``/``out_spec`` partitioning the non-pipe axes and set
+``stage_b_collectives=True`` so stage B's cross-vault ``lax.psum``s execute
+uniformly on every pipe rank instead of under a per-rank ``lax.cond``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -31,18 +40,32 @@ from repro import compat
 P = jax.sharding.PartitionSpec
 
 
+def _n_micro(micro_inputs) -> int:
+    leaves = jax.tree.leaves(micro_inputs)
+    if not leaves:
+        raise ValueError("micro_inputs pytree has no leaves")
+    return leaves[0].shape[0]
+
+
+def _at(micro_inputs, t):
+    """Microbatch t of a stacked pytree (every leaf (n_micro, ...))."""
+    return jax.tree.map(lambda x: x[t], micro_inputs)
+
+
 def software_pipeline_scan(stage_a: Callable, stage_b: Callable,
-                           micro_inputs: jax.Array) -> jax.Array:
+                           micro_inputs) -> Any:
     """Skewed scan: at tick t, stage_b consumes stage_a's output from t-1
     while stage_a produces t's — the two are data-independent within a tick,
     so XLA's scheduler may overlap them (on one device this documents the
     dependence structure; on two pipeline shards use ``two_stage_pipeline``).
 
-    micro_inputs: (n_micro, ...) stacked microbatches.
-    Returns stacked stage_b outputs, (n_micro, ...).
+    micro_inputs: pytree of (n_micro, ...) stacked microbatches (a bare
+    array is the single-leaf case).  stage_b may itself be a shard_map
+    program (a sharded routing stage) — collectives trace fine under the
+    scan.  Returns stacked stage_b outputs, each leaf (n_micro, ...).
     """
-    n = micro_inputs.shape[0]
-    a0 = stage_a(micro_inputs[0])
+    a0 = stage_a(_at(micro_inputs, 0))
+    rest = jax.tree.map(lambda x: x[1:], micro_inputs)
 
     def tick(carry, x_next):
         prev_a = carry
@@ -50,56 +73,88 @@ def software_pipeline_scan(stage_a: Callable, stage_b: Callable,
         a_out = stage_a(x_next)          # independent of b_out
         return a_out, b_out
 
-    last_a, outs = lax.scan(tick, a0, micro_inputs[1:])
+    last_a, outs = lax.scan(tick, a0, rest)
     final = stage_b(last_a)
-    return jnp.concatenate([outs, final[None]], axis=0)
+    return jax.tree.map(lambda o, f: jnp.concatenate([o, f[None]], axis=0),
+                        outs, final)
 
 
 def two_stage_pipeline(stage_a: Callable, stage_b: Callable,
                        mesh: jax.sharding.Mesh, axis: str,
-                       a_out_shape: jax.ShapeDtypeStruct):
+                       a_out_shape, *,
+                       in_spec: Any = None, out_spec: Any = None,
+                       stage_b_collectives: bool = False):
     """Build a pipelined runner over a 2-sized mesh axis.
 
     stage_a: microbatch -> hidden        (runs on pipe rank 0, the "host")
     stage_b: hidden -> output            (runs on pipe rank 1, the "PIM")
 
-    Returns f(micro_inputs:(n_micro, ...)) -> (n_micro, ...) outputs.
-    Inputs/outputs live replicated on the axis; hidden states cross stages
-    via ppermute.  n_micro ticks + 1 bubble tick; at every interior tick both
-    stages execute concurrently on their own devices (paper Fig.8 overlap).
+    Returns f(micro_inputs) -> stacked outputs; micro_inputs is a pytree
+    whose leaves are (n_micro, ...) stacked microbatches.  Hidden states
+    cross stages via ppermute.  n_micro ticks + 1 bubble tick; at every
+    interior tick both stages execute concurrently on their own devices
+    (paper Fig.8 overlap).
+
+    By default inputs/outputs live replicated on every mesh axis.  To run a
+    *sharded* stage B inside the pipeline (DESIGN.md §Serving — the §5.1
+    vault distribution inside the §4 PIM stage) pass:
+
+      in_spec / out_spec       PartitionSpecs (or pytree prefixes thereof)
+                               for the stacked inputs/outputs over the
+                               non-pipe mesh axes; leading dim = n_micro.
+      a_out_shape              the *per-shard* hidden ShapeDtypeStruct
+                               (pytree ok).
+      stage_b_collectives      True when stage_b psums over a second mesh
+                               axis: stage B then runs unconditionally on
+                               both pipe ranks (rank 0 on a zero inbox, its
+                               result discarded by the final pipe-psum mask)
+                               so its collectives stay uniform per vault
+                               group instead of sitting under a per-rank
+                               ``lax.cond``.
     """
     if mesh.shape[axis] != 2:
         raise ValueError(f"two_stage_pipeline needs |{axis}| == 2, "
                          f"got {mesh.shape[axis]}")
+    in_spec = P(None) if in_spec is None else in_spec
+    out_spec = P() if out_spec is None else out_spec
 
     def per_device(micro_inputs):
         stage = lax.axis_index(axis)
-        n = micro_inputs.shape[0]
-        zero_hidden = jnp.zeros(a_out_shape.shape, a_out_shape.dtype)
+        n = _n_micro(micro_inputs)
+        zero_hidden = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), a_out_shape)
 
         def tick(carry, t):
             inbox = carry
             # stage 0 computes A on microbatch t (guard t<n for drain tick)
-            xa = micro_inputs[jnp.minimum(t, n - 1)]
-            a_out = lax.cond(stage == 0,
-                             lambda: stage_a(xa).astype(a_out_shape.dtype),
-                             lambda: zero_hidden)
+            xa = _at(micro_inputs, jnp.minimum(t, n - 1))
+            a_out = lax.cond(
+                stage == 0,
+                lambda: jax.tree.map(lambda h, s: h.astype(s.dtype),
+                                     stage_a(xa), a_out_shape),
+                lambda: zero_hidden)
             # stage 1 computes B on what arrived last tick
-            b_out = lax.cond(stage == 1,
-                             lambda: stage_b(inbox),
-                             lambda: jnp.zeros_like(stage_b(zero_hidden)))
+            if stage_b_collectives:
+                b_out = stage_b(inbox)
+            else:
+                b_out = lax.cond(
+                    stage == 1,
+                    lambda: stage_b(inbox),
+                    lambda: jax.tree.map(jnp.zeros_like,
+                                         stage_b(zero_hidden)))
             # hand-off: rank0 -> rank1
-            new_inbox = lax.ppermute(a_out, axis, [(0, 1)])
+            new_inbox = jax.tree.map(
+                lambda h: lax.ppermute(h, axis, [(0, 1)]), a_out)
             return new_inbox, b_out
 
         _, b_hist = lax.scan(tick, zero_hidden, jnp.arange(n + 1))
         # tick t emitted B(microbatch t-1); drop the bubble tick 0.
-        outs = b_hist[1:]
-        # results live on stage 1; broadcast so out_specs can be replicated.
-        return lax.psum(jnp.where(stage == 1, outs, jnp.zeros_like(outs)),
-                        axis)
+        outs = jax.tree.map(lambda h: h[1:], b_hist)
+        # results live on stage 1; broadcast so out_spec needn't carry the
+        # pipe axis.
+        return jax.tree.map(
+            lambda h: lax.psum(
+                jnp.where(stage == 1, h, jnp.zeros_like(h)), axis),
+            outs)
 
-    return jax.jit(compat.shard_map(
-        per_device, mesh,
-        P(*(None,) * 1),               # microbatches replicated on `axis`
-        P()))                          # outputs replicated
+    return jax.jit(compat.shard_map(per_device, mesh, (in_spec,), out_spec))

@@ -236,9 +236,14 @@ class ExecutionPlan:
         dimension, and shard the argmax — ``plan="auto"`` in build_router.
     pipeline: "software" (single-group skewed scan) or "two_stage"
         (disjoint device groups on ``pipeline_axis``, |axis| == 2); the
-        router then consumes stacked microbatches (n_micro, ...).
-        ``stage_a`` is the producer stage (e.g. conv + votes); identity
-        when omitted.
+        router then consumes stacked microbatches — a pytree whose leaves
+        are (n_micro, ...) (e.g. images + a padding mask, DESIGN.md
+        §Serving).  ``stage_a`` is the producer stage (e.g. conv + votes);
+        identity when omitted.  Pipeline plans now COMPOSE with axes/auto:
+        the sharded/auto distribution applies to the routing stage
+        *inside* the pipeline (the paper's §5.1 vault distribution running
+        in the §4 PIM stage) over a non-pipe mesh axis, resolved against
+        the stage_a output (votes) shape.
     """
     mesh: Optional[jax.sharding.Mesh] = None
     axes: Tuple[Tuple[str, str], ...] = ()
@@ -307,10 +312,17 @@ def plan_axes(spec: RouterSpec, plan: ExecutionPlan,
     snippets).  Among those, argmax of the §5.1.2 execution score.  The
     mesh's *first* axis hosts the distribution (the paper shards exactly
     one dimension; multi-axis auto plans are future work — explicit
-    ``axes`` already supports them).
+    ``axes`` already supports them).  Pipelined plans reserve
+    ``plan.pipeline_axis`` for the stage split, so the first *other* mesh
+    axis hosts the distribution (the routing stage's vault axis).
     """
     mesh = plan.mesh if plan.mesh is not None else _default_mesh()
-    axis = mesh.axis_names[0]
+    candidates = [a for a in mesh.axis_names
+                  if not (plan.pipeline is not None
+                          and a == plan.pipeline_axis)]
+    if not candidates:
+        return ()
+    axis = candidates[0]
     n = mesh.shape[axis]
     algo = get_algorithm(spec.algorithm)
     s = plan.rp_shape or derive_rp_shape(spec.algorithm, shapes,
@@ -346,13 +358,29 @@ class Router:
     # -- plan resolution ----------------------------------------------------
 
     def resolve(self, *args) -> Tuple[Tuple[str, str], ...]:
-        """Concrete (dim, mesh_axis) pairs for these inputs."""
+        """Concrete (dim, mesh_axis) pairs for these inputs.
+
+        With a pipeline plan the distribution lives inside the routing
+        stage, so resolution runs against the stage_a output (votes) shape
+        of one microbatch, not the stacked pipeline inputs.
+        """
+        if self.plan.pipeline is not None:
+            return self._resolve_shapes((self._hidden_struct(args[0]).shape,))
         return self._resolve_shapes(tuple(jnp.shape(a) for a in args))
 
     def _resolve_shapes(self, shapes: tuple) -> Tuple[Tuple[str, str], ...]:
         if not self.plan.auto:
             return tuple(self.plan.axes)
         return plan_axes(self.spec, self.plan, shapes)
+
+    def _hidden_struct(self, micro) -> jax.ShapeDtypeStruct:
+        """Abstract stage_a output for one microbatch of stacked pipeline
+        inputs (a pytree with (n_micro, ...) leaves)."""
+        stage_a = self.plan.stage_a or (lambda x: x)
+        per_micro = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a)[1:],
+                                           jnp.result_type(a)), micro)
+        return jax.eval_shape(stage_a, per_micro)
 
     def _mesh(self) -> jax.sharding.Mesh:
         return self.plan.mesh if self.plan.mesh is not None \
@@ -374,30 +402,81 @@ class Router:
             lambda *args: algo.run(args, spec, ax),
             self._mesh(), tuple(algo.in_specs(ax)), algo.out_specs(ax))
 
-    def _pipelined_fn(self, shapes: tuple, dtypes: tuple) -> Callable:
+    def _pipelined_fn(self, micro) -> Callable:
         plan = self.plan
         stage_a = plan.stage_a or (lambda x: x)
-        core = self._core_fn(())   # pipeline stages run unsharded cores
+        hidden = self._hidden_struct(micro)
+        axes = self._resolve_shapes((hidden.shape,))
         if plan.pipeline == "software":
-            return lambda micro: pipeline_lib.software_pipeline_scan(
-                stage_a, core, micro)
-        # two_stage: needs the hidden (stage_a output) ShapeDtypeStruct,
-        # derived by abstract evaluation of stage_a on one microbatch.
-        per_micro = jax.ShapeDtypeStruct(shapes[0][1:], dtypes[0])
-        hidden = jax.eval_shape(stage_a, per_micro)
+            # the routing stage may itself be a shard_map program (§5.1
+            # distribution inside the stage) — it traces under the scan.
+            core = self._core_fn(axes)
+            return lambda m: pipeline_lib.software_pipeline_scan(
+                stage_a, core, m)
+        if not axes:
+            return pipeline_lib.two_stage_pipeline(
+                stage_a, self._core_fn(()), self._mesh(),
+                plan.pipeline_axis, hidden)
+        return self._two_stage_sharded_fn(stage_a, hidden, axes)
+
+    def _two_stage_sharded_fn(self, stage_a: Callable,
+                              hidden: jax.ShapeDtypeStruct,
+                              axes: Tuple[Tuple[str, str], ...]) -> Callable:
+        """§4 pipeline with the §5.1 vault distribution inside the PIM
+        stage (DESIGN.md §Serving): one shard_map spans the pipe axis AND
+        the routing axis; stage B is the per-shard algorithm body with its
+        Table-2 psums on the vault axis.
+
+        B-sharded plans shard the pipeline *inputs* (each vault's host
+        group encodes its own lanes); L/H-sharded plans replicate the
+        encoder and have each host shard slice its vault's chunk of the
+        votes before the hand-off — the paper's host-computes-votes,
+        scatters-to-vaults traffic pattern.
+        """
+        plan, algo, spec = self.plan, self.algorithm, self.spec
+        mesh = self._mesh()
+        (dim, vaxis), = axes
+        ax = dict(axes)
+        n = mesh.shape[vaxis]
+        dim_index = {"B": 0, "L": 1, "H": 2}[dim]
+        if hidden.shape[dim_index] % n:
+            raise ValueError(
+                f"votes dim {dim}={hidden.shape[dim_index]} not divisible "
+                f"by |{vaxis}|={n}")
+        chunk = hidden.shape[dim_index] // n
+        shard_shape = tuple(chunk if i == dim_index else s
+                            for i, s in enumerate(hidden.shape))
+        per_shard_hidden = jax.ShapeDtypeStruct(shard_shape, hidden.dtype)
+
+        def stage_a_shard(x):
+            h = stage_a(x)
+            if dim == "B":
+                return h            # inputs were already the B-chunk
+            i = jax.lax.axis_index(vaxis)
+            return jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk,
+                                                dim_index)
+
+        def stage_b_shard(h):
+            return algo.run((h,), spec, ax)
+
+        in_spec = P(None, vaxis) if dim == "B" else P(None)
+        out_spec = P(None, *algo.out_specs(ax))
         return pipeline_lib.two_stage_pipeline(
-            stage_a, core, self._mesh(), plan.pipeline_axis, hidden)
+            stage_a_shard, stage_b_shard, mesh, plan.pipeline_axis,
+            per_shard_hidden, in_spec=in_spec, out_spec=out_spec,
+            stage_b_collectives=True)
 
     def _executor(self, args) -> Callable:
-        shapes = tuple(jnp.shape(a) for a in args)
-        dtypes = tuple(jnp.result_type(a) for a in args)
-        key = (shapes, dtypes)
+        leaves, treedef = jax.tree.flatten(args)
+        key = (treedef, tuple((jnp.shape(l), jnp.result_type(l))
+                              for l in leaves))
         fn = self._cache.get(key)
         if fn is None:
             if self.plan.pipeline is not None:
-                fn = self._pipelined_fn(shapes, dtypes)
+                fn = self._pipelined_fn(args[0])
             else:
-                fn = self._core_fn(self._resolve_shapes(shapes))
+                fn = self._core_fn(self._resolve_shapes(
+                    tuple(jnp.shape(a) for a in args)))
             self._cache[key] = fn
         return fn
 
@@ -437,10 +516,15 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             raise ValueError("pipelined plans currently support the "
                              "'dynamic' algorithm only (single input/output "
                              "stage)")
-        if plan.axes or plan.auto:
-            raise ValueError("pipeline plans and sharded/auto plans are "
-                             "alternatives — pick one (pipelining a sharded "
-                             "stage is future work)")
+        if len(plan.axes) > 1:
+            raise ValueError("pipelined plans shard at most one routing "
+                             "dim inside the stage (multi-dim sharded "
+                             "pipeline stages are future work)")
+        if any(a == plan.pipeline_axis for _, a in plan.axes):
+            raise ValueError(
+                f"mesh axis {plan.pipeline_axis!r} is the pipeline's stage "
+                "axis; shard the routing stage over a different axis (or "
+                "rename pipeline_axis)")
         if plan.pipeline == "two_stage":
             mesh = plan.mesh
             if mesh is None or plan.pipeline_axis not in mesh.axis_names:
@@ -457,7 +541,9 @@ def build_router(spec: RouterSpec = RouterSpec(), plan=None) -> Router:
 
     Returns a ``Router`` — call it like the underlying algorithm
     (``router(u_hat)`` for dynamic, ``router(votes, a_in)`` for EM); with a
-    pipeline plan it consumes stacked microbatches ``(n_micro, ...)``.
+    pipeline plan it consumes stacked microbatches: a pytree whose leaves
+    are ``(n_micro, ...)`` (axes/auto then distribute the routing stage
+    inside the pipeline — DESIGN.md §Serving).
     """
     return Router(spec, _normalize_plan(plan))
 

@@ -1,0 +1,111 @@
+"""CapsNet serving launcher — continuous batching over the §4 pipeline.
+
+Drives the paper's workload (Table-1 CapsNet benchmarks) through
+``repro.runtime.caps_serve`` (DESIGN.md §Serving): synthetic requests
+arrive in ragged bursts, the server pads them into fixed microbatch lanes,
+and every wave streams through the host‖PIM pipeline with the routing
+distribution chosen by ``--plan auto`` (§5.1.2 planner).
+
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke
+    PYTHONPATH=src python -m repro.launch.serve_caps \
+        --network Caps-MN1 --requests 64 --pipeline software --plan auto
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
+from repro.data.synthetic import SyntheticCapsDataset
+from repro.models import capsnet
+from repro.runtime.caps_serve import CapsServer, ServeConfig
+
+
+def arrival_schedule(total: int, mean_per_tick: float, seed: int = 0):
+    """Deterministic ragged arrival counts summing to ``total``."""
+    rng = np.random.default_rng(seed)
+    counts = []
+    left = total
+    while left > 0:
+        c = min(left, int(rng.poisson(mean_per_tick)))
+        counts.append(c)
+        left -= c
+    return counts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--network", default="Caps-MN1",
+                    choices=sorted(CAPS_BENCHMARKS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny request count (CI)")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--microbatch", type=int, default=8)
+    ap.add_argument("--n-micro", type=int, default=4)
+    ap.add_argument("--pipeline", default="software",
+                    choices=("software", "two_stage", "none"),
+                    help="§4 pipeline form; two_stage needs a 2-sized "
+                         "'pipe' mesh axis (>=2 devices)")
+    ap.add_argument("--plan", default="none", choices=("none", "auto"),
+                    help="routing-stage distribution: §5.1.2 planner or "
+                         "unsharded")
+    ap.add_argument("--load", type=float, default=0.75,
+                    help="offered load as a fraction of wave capacity "
+                         "per tick")
+    args = ap.parse_args()
+
+    if args.smoke:
+        caps_cfg = smoke_caps()
+        args.requests = min(args.requests, 24)
+        args.microbatch, args.n_micro = 4, 2
+    else:
+        caps_cfg = CAPS_BENCHMARKS[args.network]
+
+    pipeline = None if args.pipeline == "none" else args.pipeline
+    mesh = None
+    if pipeline == "two_stage":
+        n = len(jax.devices())
+        if n < 2:
+            raise SystemExit("--pipeline two_stage needs >= 2 devices for "
+                             "the 2-sized 'pipe' axis (this host has "
+                             f"{n}); use --pipeline software")
+        from repro import compat
+        mesh = compat.make_mesh((2, n // 2), ("pipe", "vault"),
+                                devices=jax.devices()[:2 * (n // 2)])
+    cfg = ServeConfig(microbatch=args.microbatch, n_micro=args.n_micro,
+                      pipeline=pipeline, mesh=mesh,
+                      routing_plan="auto" if args.plan == "auto" else None)
+
+    params = capsnet.init_capsnet(jax.random.PRNGKey(0), caps_cfg)
+    server = CapsServer(params, caps_cfg, cfg=cfg)
+    ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
+                              caps_cfg.num_h_caps)
+
+    mean_per_tick = max(1.0, args.load * cfg.wave_lanes)
+    schedule = arrival_schedule(args.requests, mean_per_tick)
+    print(f"{caps_cfg.name}: {args.requests} requests over "
+          f"{len(schedule)} ticks (ragged), wave = {cfg.n_micro} x "
+          f"{cfg.microbatch} lanes, pipeline={pipeline}, "
+          f"plan={args.plan}")
+
+    done = []
+    for tick, count in enumerate(schedule):
+        if count:
+            batch = ds.batch(tick, count)
+            server.submit(batch["images"])
+        done.extend(server.step())
+    done.extend(server.drain())
+
+    s = server.metrics.summary()
+    assert s["completed"] == args.requests, (s, args.requests)
+    print(f"served {s['completed']} requests in {s['waves']} waves "
+          f"({s['padded_lanes']} padded lanes)")
+    print(f"latency p50 {s['p50_latency_s'] * 1e3:.1f} ms, "
+          f"p90 {s['p90_latency_s'] * 1e3:.1f} ms; "
+          f"throughput {s['throughput_rps']:.1f} req/s")
+    preds = {c.rid: c.pred for c in done}
+    print("first predictions:", [preds[r] for r in sorted(preds)[:8]])
+
+
+if __name__ == "__main__":
+    main()

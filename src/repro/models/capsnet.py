@@ -52,6 +52,19 @@ def primary_caps(params, images: jax.Array, cfg: CapsConfig) -> jax.Array:
     return u[:, :cfg.num_l_caps]
 
 
+def encode_votes(params, images: jax.Array, cfg: CapsConfig) -> jax.Array:
+    """The §4 pipeline's host ("encoder") stage as one function: conv stack +
+    PrimaryCaps + the Eq.1 vote projection — everything *before* the routing
+    procedure.  images (B,H,W,C) -> u_hat (B, N_L, N_H, C_H).
+
+    This is the ``stage_a`` the serving path hands to a pipelined
+    ``ExecutionPlan`` (DESIGN.md §Serving): the routing stage then consumes
+    the votes on its own device group, exactly the paper's GPU‖HMC split.
+    """
+    u = primary_caps(params, images, cfg)
+    return CL.predict_votes(params["digit"], u)
+
+
 def forward(params, images: jax.Array, cfg: CapsConfig,
             routing_cfg: Optional[routing_lib.RoutingConfig] = None,
             labels: Optional[jax.Array] = None,

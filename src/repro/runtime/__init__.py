@@ -1,5 +1,5 @@
-from repro.runtime import (compression, elastic, mesh_utils, serve_loop,
-                           sharding, straggler, train_loop)
+from repro.runtime import (caps_serve, compression, elastic, mesh_utils,
+                           serve_loop, sharding, straggler, train_loop)
 
-__all__ = ["compression", "elastic", "mesh_utils", "serve_loop", "sharding",
-           "straggler", "train_loop"]
+__all__ = ["caps_serve", "compression", "elastic", "mesh_utils",
+           "serve_loop", "sharding", "straggler", "train_loop"]

@@ -1,0 +1,261 @@
+"""Continuous-batching CapsNet serving over the §4 host‖PIM pipeline.
+
+The ROADMAP north star as a subsystem (DESIGN.md §Serving): a request queue
+admits variable-count arrivals, pads them into fixed microbatch lanes so the
+routed forward compiles exactly once per (spec, plan), and streams waves of
+microbatches through the paper's two-stage pipeline — encoder ("host") stage
+overlapping the routing ("PIM") stage of the previous microbatch, with the
+§5.1 vault distribution optionally running *inside* the routing stage
+(``routing_plan="auto"`` lets the §5.1.2 planner pick the dimension).
+
+Padding note (DESIGN.md §Serving): the routing logits ``b`` are shared
+across the batch (the paper's Table-2 B-dim aggregation), so batch lanes
+couple through Eq.4 and naive zero-image padding would perturb real lanes
+once biases are non-zero.  The encoder stage therefore multiplies the votes
+by a per-lane mask — masked lanes contribute exactly zero to every
+cross-lane aggregation, making padding bit-invariant for the real lanes.
+
+    server = CapsServer(params, caps_cfg, cfg=ServeConfig())
+    server.submit(images)           # any count, any tick
+    done = server.step()            # one wave: [Completion(rid, pred, ...)]
+
+``repro.launch.serve_caps`` is the CLI; ``benchmarks/bench_serving.py``
+sweeps offered load over the pipelined vs unpipelined arms.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import router as router_lib
+from repro.models import capsnet
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Shape and execution policy of one serving wave.
+
+    microbatch:   lanes per microbatch (the pipeline's transfer unit).
+    n_micro:      microbatches per wave; one ``step()`` runs one wave, so
+                  wave capacity = microbatch * n_micro requests.
+    pipeline:     "software" (skewed-scan overlap, any device count),
+                  "two_stage" (disjoint device groups over ``pipeline_axis``,
+                  needs |axis| == 2 — the paper's GPU‖HMC split), or None
+                  (unpipelined reference arm: encoder and routing run
+                  back-to-back per microbatch).
+    routing_plan: distribution of the routing stage — None (unsharded),
+                  "auto" (§5.1.2 planner picks the dimension), or explicit
+                  ((dim, mesh_axis),) pairs.
+    mesh:         mesh hosting pipeline_axis and/or the routing axis; None
+                  uses the router's default single-axis "vault" mesh.
+    """
+    microbatch: int = 8
+    n_micro: int = 4
+    pipeline: Optional[str] = "software"
+    pipeline_axis: str = "pipe"
+    routing_plan: Any = None
+    mesh: Optional[jax.sharding.Mesh] = None
+
+    @property
+    def wave_lanes(self) -> int:
+        return self.microbatch * self.n_micro
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    image: np.ndarray
+    t_submit: float
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    pred: int
+    latency_s: float
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    submitted: int = 0
+    completed: int = 0
+    waves: int = 0
+    padded_lanes: int = 0
+    latencies_s: List[float] = dataclasses.field(default_factory=list)
+    t_first_submit: Optional[float] = None
+    t_last_done: Optional[float] = None
+
+    def summary(self) -> Dict[str, Any]:
+        lat = sorted(self.latencies_s)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return float("nan")
+            return lat[min(len(lat) - 1, int(round(p * (len(lat) - 1))))]
+
+        span = ((self.t_last_done - self.t_first_submit)
+                if self.t_first_submit is not None
+                and self.t_last_done is not None else 0.0)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "waves": self.waves,
+            "padded_lanes": self.padded_lanes,
+            "p50_latency_s": pct(0.5),
+            "p90_latency_s": pct(0.9),
+            "throughput_rps": (self.completed / span if span > 0
+                               else float(self.completed)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Wave executable — compile once per (spec, plan)
+# ---------------------------------------------------------------------------
+
+def make_wave_fn(params, caps_cfg, spec: Optional[router_lib.RouterSpec],
+                 cfg: ServeConfig) -> Callable:
+    """Build the jitted wave executable.
+
+    wave({"images": (n_micro, microbatch, H, W, C),
+          "mask":   (n_micro, microbatch)}) -> class_probs
+                                               (n_micro, microbatch, N_H)
+
+    The encoder stage masks the Eq.1 votes per lane (padding invariance,
+    see module docstring) and the routing stage runs through
+    ``core.router.build_router`` — pipelined per ``cfg.pipeline``, with the
+    routing distribution per ``cfg.routing_plan``.  Constant wave shapes
+    mean exactly one compilation per (spec, plan).
+    """
+    if spec is None:
+        spec = router_lib.RouterSpec(iterations=caps_cfg.routing_iters)
+
+    def stage_a(micro):
+        votes = capsnet.encode_votes(params, micro["images"], caps_cfg)
+        return votes * micro["mask"][:, None, None, None]
+
+    auto = cfg.routing_plan == "auto"
+    axes = (tuple(cfg.routing_plan)
+            if isinstance(cfg.routing_plan, (tuple, list)) else ())
+
+    if cfg.pipeline is not None:
+        plan = router_lib.ExecutionPlan(
+            mesh=cfg.mesh, axes=axes, auto=auto, pipeline=cfg.pipeline,
+            pipeline_axis=cfg.pipeline_axis, stage_a=stage_a)
+        router = router_lib.build_router(spec, plan)
+        return jax.jit(lambda micro: jnp.linalg.norm(router(micro), axis=-1))
+
+    # unpipelined reference arm: same stages, strictly sequential per
+    # microbatch (lax.map = scan, so a sharded routing core traces fine).
+    plan = (router_lib.ExecutionPlan(mesh=cfg.mesh, axes=axes, auto=auto)
+            if (axes or auto or cfg.mesh is not None) else None)
+    core = router_lib.build_router(spec, plan)
+    return jax.jit(lambda micro: jnp.linalg.norm(
+        jax.lax.map(lambda m: core(stage_a(m)), micro), axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# CapsServer — queue -> pad -> microbatch -> pipeline
+# ---------------------------------------------------------------------------
+
+class CapsServer:
+    """Continuous-batching CapsNet classification server (DESIGN.md
+    §Serving).
+
+    ``submit()`` admits any number of requests at any time; ``step()``
+    drains up to one wave (``cfg.wave_lanes`` requests) from the queue,
+    pads the tail microbatch to the fixed lane count, runs the wave through
+    the pipelined router, and returns per-request completions with
+    queue+compute latency.  ``drain()`` steps until the queue is empty.
+    """
+
+    def __init__(self, params, caps_cfg,
+                 spec: Optional[router_lib.RouterSpec] = None,
+                 cfg: ServeConfig = ServeConfig(),
+                 clock: Callable[[], float] = time.perf_counter):
+        self.caps_cfg = caps_cfg
+        self.cfg = cfg
+        self.clock = clock
+        self.metrics = ServeMetrics()
+        self._queue: Deque[Request] = collections.deque()
+        self._next_rid = 0
+        self._wave_fn = make_wave_fn(params, caps_cfg, spec, cfg)
+        self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
+                             caps_cfg.image_channels)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, images: Sequence[np.ndarray]) -> List[int]:
+        """Enqueue a ragged arrival of images; returns their request ids."""
+        now = self.clock()
+        if self.metrics.t_first_submit is None and len(images):
+            self.metrics.t_first_submit = now
+        rids = []
+        for img in np.asarray(images, np.float32):
+            if img.shape != self._image_shape:
+                raise ValueError(f"image shape {img.shape} != "
+                                 f"{self._image_shape}")
+            self._queue.append(Request(self._next_rid, img, now))
+            rids.append(self._next_rid)
+            self._next_rid += 1
+        self.metrics.submitted += len(rids)
+        return rids
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- one wave ------------------------------------------------------------
+
+    def step(self) -> List[Completion]:
+        """Run one wave over whatever is queued (up to ``wave_lanes``).
+
+        Returns [] when the queue is empty — otherwise pads the admitted
+        requests to the constant wave shape (masked lanes, so padding never
+        perturbs real outputs) and completes them.
+        """
+        if not self._queue:
+            return []
+        cfg = self.cfg
+        take = min(len(self._queue), cfg.wave_lanes)
+        reqs = [self._queue.popleft() for _ in range(take)]
+
+        images = np.zeros((cfg.wave_lanes,) + self._image_shape, np.float32)
+        mask = np.zeros((cfg.wave_lanes,), np.float32)
+        for i, r in enumerate(reqs):
+            images[i] = r.image
+            mask[i] = 1.0
+        micro = {
+            "images": jnp.asarray(images).reshape(
+                (cfg.n_micro, cfg.microbatch) + self._image_shape),
+            "mask": jnp.asarray(mask).reshape(cfg.n_micro, cfg.microbatch),
+        }
+        probs = self._wave_fn(micro)                 # (n_micro, mb, N_H)
+        preds = np.asarray(jnp.argmax(probs, axis=-1)).reshape(-1)
+
+        t_done = self.clock()
+        out = []
+        for i, r in enumerate(reqs):
+            lat = t_done - r.t_submit
+            out.append(Completion(r.rid, int(preds[i]), lat))
+            self.metrics.latencies_s.append(lat)
+        self.metrics.completed += take
+        self.metrics.padded_lanes += cfg.wave_lanes - take
+        self.metrics.waves += 1
+        self.metrics.t_last_done = t_done
+        return out
+
+    def drain(self) -> List[Completion]:
+        """Step until the queue is empty; returns all completions."""
+        out: List[Completion] = []
+        while self._queue:
+            out.extend(self.step())
+        return out

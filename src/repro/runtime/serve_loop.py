@@ -8,10 +8,13 @@ Two workloads share this module:
     through the unified Router API (``core.router.build_router``), the
     paper's workload as a servable endpoint: requests are padded into a
     constant batch shape so the routed forward compiles exactly once per
-    (spec, plan).
+    (spec, plan).  The queue-fed continuous-batching form of this path —
+    waves of microbatches through the §4 host‖PIM pipeline — lives in
+    ``repro.runtime.caps_serve`` (DESIGN.md §Serving).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional
 
@@ -30,6 +33,36 @@ class ServeStats:
     steps: int = 0
 
 
+# jitted prefill/decode callables, hoisted out of ``generate`` so repeated
+# requests hit the same jit cache entries instead of re-wrapping fresh
+# lambdas per call (a fresh lambda is a fresh jit cache key — every request
+# would re-trace).  Keyed on everything the closures capture statically;
+# LRU-bounded so a server seeing many distinct prompt lengths doesn't pin
+# compiled executables forever.
+_LM_FNS: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_LM_FNS_MAX = 16
+
+
+def _rules_key(rules: AxisRules) -> tuple:
+    return (rules.enabled, rules.mesh, tuple(sorted(rules.rules.items())))
+
+
+def _lm_fns(cfg: lm.ArchConfig, max_len: int, rules: AxisRules):
+    key = (cfg, max_len, _rules_key(rules))
+    fns = _LM_FNS.get(key)
+    if fns is None:
+        prefill_fn = jax.jit(
+            lambda p, b: lm.prefill(p, cfg, b, max_len=max_len, rules=rules))
+        step_fn = jax.jit(
+            lambda p, s, t: lm.decode_step(p, cfg, s, t, rules))
+        _LM_FNS[key] = fns = (prefill_fn, step_fn)
+        while len(_LM_FNS) > _LM_FNS_MAX:
+            _LM_FNS.popitem(last=False)
+    else:
+        _LM_FNS.move_to_end(key)
+    return fns
+
+
 def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
              max_new_tokens: int, rules: AxisRules = NO_RULES,
              eos_id: Optional[int] = None):
@@ -39,10 +72,8 @@ def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
     """
     B, S = batch["tokens"].shape
     stats = ServeStats(prefill_tokens=B * S)
-    logits, state = jax.jit(
-        lambda p, b: lm.prefill(p, cfg, b, max_len=S + max_new_tokens,
-                                rules=rules))(params, batch)
-    step_fn = jax.jit(lambda p, s, t: lm.decode_step(p, cfg, s, t, rules))
+    prefill_fn, step_fn = _lm_fns(cfg, S + max_new_tokens, rules)
+    logits, state = prefill_fn(params, batch)
     toks = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
     outs: List[jax.Array] = [toks]
     finished = jnp.zeros((B,), bool)

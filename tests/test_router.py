@@ -227,12 +227,34 @@ def test_software_pipeline_plan(key):
                                rtol=1e-5, atol=1e-6)
 
 
-def test_pipeline_plan_rejects_sharded_combo():
+def test_pipeline_composes_with_sharded_plan(key):
+    """Pipeline x sharded-plan composition (DESIGN.md §Serving): the
+    distribution applies to the routing stage inside the pipeline."""
+    micro = jax.random.normal(key, (4, 2, 8, 4, 8))
+    spec = RouterSpec(iterations=3)
+    want = jnp.stack([build_router(spec)(m) for m in micro])
     mesh = compat.make_mesh((1,), ("x",))
-    with pytest.raises(ValueError, match="alternatives"):
+    for plan in (ExecutionPlan(mesh=mesh, axes=(("B", "x"),),
+                               pipeline="software"),
+                 ExecutionPlan(mesh=mesh, auto=True, pipeline="software")):
+        got = build_router(spec, plan)(micro)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+    # the multi-device two_stage form is covered in
+    # tests/test_serving.py::test_two_stage_sharded_pipeline_composition
+
+
+def test_pipeline_plan_invalid_combos_still_raise():
+    mesh = compat.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match="future work"):
+        build_router(RouterSpec(),
+                     ExecutionPlan(mesh=mesh,
+                                   axes=(("B", "x"), ("L", "x")),
+                                   pipeline="software"))
+    with pytest.raises(ValueError, match="stage axis"):
         build_router(RouterSpec(),
                      ExecutionPlan(mesh=mesh, axes=(("B", "x"),),
-                                   pipeline="software"))
+                                   pipeline="software", pipeline_axis="x"))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,236 @@
+"""CapsNet serving subsystem (runtime.caps_serve, DESIGN.md §Serving):
+padding invariance, pipelined == unpipelined equivalence, queue drain under
+ragged arrivals, the serve_caps CLI smoke, and the pipeline x sharded-plan
+composition on a multi-device mesh (subprocess, like tests/test_sharded.py).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.caps_benchmarks import CapsConfig
+from repro.data.synthetic import SyntheticCapsDataset
+from repro.models import capsnet
+from repro.runtime.caps_serve import CapsServer, ServeConfig, make_wave_fn
+
+ENV = {**os.environ,
+       "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def tiny_caps() -> CapsConfig:
+    """Smaller than smoke_caps — serving tests run many waves."""
+    return CapsConfig("Caps-tiny", "synthetic", 8, 72, 10, 2,
+                      caps_channels=2, conv_channels=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_caps()
+    params = capsnet.init_capsnet(jax.random.PRNGKey(0), cfg)
+    # non-zero conv biases: a zero-image pad lane now produces non-zero
+    # votes, so padding invariance genuinely depends on the lane mask
+    # (routing's b is batch-shared — paper Table 2's B aggregation).
+    params["primary"]["conv1"]["b"] = (
+        params["primary"]["conv1"]["b"] + 0.1)
+    params["primary"]["caps_conv"]["b"] = (
+        params["primary"]["caps_conv"]["b"] + 0.05)
+    ds = SyntheticCapsDataset(cfg.image_hw, cfg.image_channels,
+                              cfg.num_h_caps)
+    return cfg, params, ds
+
+
+def _micro(cfg, images, mask, n_micro, microbatch):
+    return {"images": jnp.asarray(images, jnp.float32).reshape(
+                (n_micro, microbatch, cfg.image_hw, cfg.image_hw,
+                 cfg.image_channels)),
+            "mask": jnp.asarray(mask, jnp.float32).reshape(
+                (n_micro, microbatch))}
+
+
+def test_padding_invariance(setup):
+    """Padded lanes never change real outputs — even though routing couples
+    batch lanes through the shared b logits and the (biased) encoder maps
+    zero images to non-zero votes."""
+    cfg, params, ds = setup
+    n_micro, microbatch = 1, 8
+    real = ds.batch(0, 3)["images"]
+
+    # the mask is load-bearing: an unmasked zero image has non-zero votes
+    zero_votes = capsnet.encode_votes(
+        params, jnp.zeros((1, cfg.image_hw, cfg.image_hw,
+                           cfg.image_channels)), cfg)
+    assert float(jnp.abs(zero_votes).max()) > 1e-3
+
+    wave = make_wave_fn(params, cfg, None,
+                        ServeConfig(microbatch=microbatch, n_micro=n_micro,
+                                    pipeline="software"))
+    padded = np.zeros((microbatch, cfg.image_hw, cfg.image_hw,
+                       cfg.image_channels), np.float32)
+    padded[:3] = real
+    mask = np.zeros((microbatch,), np.float32)
+    mask[:3] = 1.0
+    got = wave(_micro(cfg, padded, mask, n_micro, microbatch))[0, :3]
+
+    ref_wave = make_wave_fn(params, cfg, None,
+                            ServeConfig(microbatch=3, n_micro=1,
+                                        pipeline="software"))
+    want = ref_wave(_micro(cfg, real, np.ones(3), 1, 3))[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pipelined_matches_unpipelined(setup):
+    """The §4 pipeline transform is exact (<= 1e-5) for the serving wave."""
+    cfg, params, ds = setup
+    n_micro, microbatch = 3, 4
+    images = ds.batch(1, n_micro * microbatch)["images"]
+    mask = np.ones((n_micro * microbatch,), np.float32)
+    mask[-2:] = 0.0            # include padded lanes in the comparison
+    micro = _micro(cfg, images, mask, n_micro, microbatch)
+    probs = {}
+    for arm, pipeline in (("piped", "software"), ("plain", None)):
+        wave = make_wave_fn(params, cfg, None,
+                            ServeConfig(microbatch=microbatch,
+                                        n_micro=n_micro,
+                                        pipeline=pipeline))
+        probs[arm] = np.asarray(wave(micro))
+    assert np.max(np.abs(probs["piped"] - probs["plain"])) <= 1e-5
+
+
+def test_queue_drains_ragged_arrivals(setup):
+    """Ragged arrival pattern fully drains; every request completes exactly
+    once with sane latency/padding accounting (fake clock)."""
+    cfg, params, ds = setup
+    ticks = iter(range(1000))
+    server = CapsServer(params, cfg,
+                        cfg=ServeConfig(microbatch=4, n_micro=2,
+                                        pipeline="software"),
+                        clock=lambda: float(next(ticks)))
+    arrivals = [3, 0, 9, 1, 0, 0, 5, 2]
+    submitted = []
+    done = []
+    for tick, count in enumerate(arrivals):
+        if count:
+            submitted += server.submit(ds.batch(tick, count)["images"])
+        done += server.step()
+    done += server.drain()
+
+    assert server.pending() == 0
+    assert sorted(c.rid for c in done) == sorted(submitted)
+    s = server.metrics.summary()
+    assert s["completed"] == s["submitted"] == sum(arrivals)
+    assert s["waves"] * server.cfg.wave_lanes \
+        == s["completed"] + s["padded_lanes"]
+    assert all(c.latency_s >= 0 for c in done)
+    assert s["p90_latency_s"] >= s["p50_latency_s"] >= 0
+    # FIFO: completion order == submission order under a single queue
+    assert [c.rid for c in done] == submitted
+
+
+def test_wave_fn_compiles_once(setup):
+    """Continuous batching keeps a constant wave shape: ragged arrivals all
+    reuse one executable (compile-once per (spec, plan))."""
+    cfg, params, ds = setup
+    server = CapsServer(params, cfg,
+                        cfg=ServeConfig(microbatch=4, n_micro=2,
+                                        pipeline="software"))
+    calls = []
+    inner = server._wave_fn
+    server._wave_fn = lambda m: (calls.append(
+        jax.tree.map(jnp.shape, m)), inner(m))[1]
+    for tick, count in enumerate([1, 7, 3]):
+        server.submit(ds.batch(tick, count)["images"])
+        server.step()
+    server.drain()
+    assert len(set(map(str, calls))) == 1      # one shape -> one executable
+
+
+def test_serve_caps_cli_smoke():
+    """python -m repro.launch.serve_caps --smoke completes and reports."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_caps", "--smoke"],
+        env=ENV, capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    assert "latency p50" in r.stdout and "throughput" in r.stdout
+
+
+def test_serving_wave_over_two_stage_mesh():
+    """The full serving composition on an 8-device mesh: CapsNet wave
+    (images+mask pytree) through two_stage pipe x {unsharded, auto, B-, L-
+    sharded} routing stage matches the unpipelined arm to <= 1e-5, and
+    CapsServer drains over it."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.configs.caps_benchmarks import CapsConfig
+from repro.data.synthetic import SyntheticCapsDataset
+from repro.models import capsnet
+from repro.runtime.caps_serve import CapsServer, ServeConfig, make_wave_fn
+cfg = CapsConfig('t', 'synthetic', 8, 72, 8, 2, caps_channels=2,
+                 conv_channels=16)
+params = capsnet.init_capsnet(jax.random.PRNGKey(0), cfg)
+ds = SyntheticCapsDataset(cfg.image_hw, cfg.image_channels, cfg.num_h_caps)
+n_micro, mb = 2, 8
+imgs = jnp.asarray(ds.batch(0, n_micro * mb)['images']).reshape(
+    (n_micro, mb, cfg.image_hw, cfg.image_hw, cfg.image_channels))
+micro = {'images': imgs, 'mask': jnp.ones((n_micro, mb))}
+mesh = compat.make_mesh((2, 4), ('pipe', 'vault'))
+plain = make_wave_fn(params, cfg, None,
+                     ServeConfig(microbatch=mb, n_micro=n_micro,
+                                 pipeline=None))(micro)
+for rp in [None, 'auto', (('B', 'vault'),), (('L', 'vault'),)]:
+    sc = ServeConfig(microbatch=mb, n_micro=n_micro, pipeline='two_stage',
+                     mesh=mesh, routing_plan=rp)
+    got = make_wave_fn(params, cfg, None, sc)(micro)
+    assert float(jnp.max(jnp.abs(got - plain))) <= 1e-5, rp
+server = CapsServer(params, cfg,
+                    cfg=ServeConfig(microbatch=mb, n_micro=n_micro,
+                                    pipeline='two_stage', mesh=mesh,
+                                    routing_plan='auto'))
+server.submit(ds.batch(1, 11)['images'])
+assert len(server.drain()) == 11 and server.pending() == 0
+print('serving over two_stage mesh OK')
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+
+
+def test_two_stage_sharded_pipeline_composition():
+    """Paper §4 x §5.1 composed: two_stage pipeline over 'pipe' with the
+    routing stage sharded (explicitly and via plan='auto') over 'vault' —
+    outputs match the plain unpipelined router to <= 1e-5."""
+    script = """
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.core.router import ExecutionPlan, RouterSpec, build_router
+key = jax.random.PRNGKey(0)
+micro = jax.random.normal(key, (5, 4, 16, 8, 6))
+W = jax.random.normal(jax.random.fold_in(key, 1), (6, 6)) * 0.3
+stage_a = lambda x: jnp.tanh(x @ W)
+spec = RouterSpec(algorithm='dynamic', iterations=3)
+want = jnp.stack([build_router(spec)(stage_a(m)) for m in micro])
+mesh = compat.make_mesh((2, 4), ('pipe', 'vault'))
+for plan in [ExecutionPlan(mesh=mesh, pipeline='two_stage',
+                           stage_a=stage_a, axes=(('L', 'vault'),)),
+             ExecutionPlan(mesh=mesh, pipeline='two_stage',
+                           stage_a=stage_a, axes=(('B', 'vault'),)),
+             ExecutionPlan(mesh=mesh, pipeline='two_stage',
+                           stage_a=stage_a, auto=True)]:
+    router = build_router(spec, plan)
+    got = jax.jit(router)(micro)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    if plan.auto:
+        axes = router.resolve(micro)
+        assert axes and axes[0][1] == 'vault', axes
+print('two-stage sharded pipeline OK')
+"""
+    r = subprocess.run([sys.executable, "-c", script], env=ENV,
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
