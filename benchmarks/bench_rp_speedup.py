@@ -1,7 +1,7 @@
 """Paper Fig.15/16 — RP acceleration: naive baseline vs fused-kernel vs
 distribution-planned execution.
 
-Three complementary measurements:
+Four complementary measurements:
 
 (1) MEASURED (this container, CPU): the naive RP (materialise every
     intermediate — the paper's GPU-pathology baseline) vs the optimised
@@ -11,12 +11,23 @@ Three complementary measurements:
 (2) MEASURED, sharded-fused arm: the same networks through
     ``RouterSpec(backend="pallas")`` composed with an L-sharded
     ExecutionPlan (DESIGN.md §Sharded-fused) — the in-vault PE chain split
-    at the Table-2 aggregation points.  On this container the mesh has one
-    device and the Pallas stages run in interpret mode, so the wall-clock
-    is a correctness/plumbing record, not a perf claim; the perf claim is
-    the DMA model (kernels/routing/ops.py::dma_bytes_per_call).
+    at the Table-2 aggregation points.
 
-(3) MODELED (paper Table-4 operating points): the analytical execution-time
+(3) MEASURED, procedure-fused arms (fp32 + bf16 û streaming):
+    ``RouterSpec(backend="pallas", fusion="procedure")`` — the
+    whole-procedure megakernel (DESIGN.md §Procedure-fused).  Every row
+    cross-checks the measured output against the jnp backend (<=1e-5 for
+    fp32 arms) and attaches the modeled DMA bytes of all three kernel
+    forms; the model itself is self-checked (procedure eliminates the
+    (L,H)/(B,H,C) round-trips, bf16 halves the û stream bytes).
+
+    Off-TPU every pallas arm runs in interpret mode and carries
+    ``"modeled_only": true`` — its wall-clock documents plumbing, not
+    performance (an interpret-mode "0.2x speedup" is not a hardware
+    regression); the perf claim is the DMA model
+    (kernels/routing/ops.py::dma_bytes_per_call).
+
+(4) MODELED (paper Table-4 operating points): the analytical execution-time
     model S⁻¹ = αE + βM (core.distribution) evaluated with the paper's HMC
     coefficients vs a GPU-baseline model (same FLOP count over P100
     FLOP/s + HBM traffic over 732GB/s), per Table-1 benchmark — the
@@ -24,15 +35,18 @@ Three complementary measurements:
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from benchmarks.common import time_stats
-from repro import compat
+from benchmarks.common import kernel_arm_stats, time_stats
+from repro import compat, kernels
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS
 from repro.core import distribution as D
 from repro.core.router import ExecutionPlan, RouterSpec, build_router
+from repro.kernels.routing import ops as rt_ops
 
 # P100 operating point for the modeled GPU baseline (paper Table 4)
 P100_FLOPS = 9.5e12          # FP32
@@ -57,9 +71,38 @@ def _measure_shapes(batch: int):
             if name in ("Caps-MN1", "Caps-EN3", "Caps-SV1")]
 
 
+def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
+    """Modeled DMA bytes of every kernel form for one network, with the
+    acceptance cross-checks applied (raise = the model or the kernel
+    regressed, fail the bench):
+
+    * procedure-fusion eliminates the per-iteration (L,H)/(B,H,C)
+      round-trips — only the final v write remains;
+    * bf16 û streaming halves the stream bytes of the only large operand.
+    """
+    model = {
+        "iteration_fused": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="iteration"),
+        "procedure_fused_fp32": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="procedure"),
+        "procedure_fused_bf16": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="procedure", stream_dtype="bf16"),
+        "sharded_stage_split": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="stage_split"),
+    }
+    it, pf = model["iteration_fused"], model["procedure_fused_fp32"]
+    assert pf["roundtrip_bytes"] == B * H * C * 4 < it["roundtrip_bytes"], (
+        "procedure-fused roundtrip traffic not eliminated", model)
+    assert (2 * model["procedure_fused_bf16"]["u_hat_stream_bytes"]
+            == pf["u_hat_stream_bytes"]), (
+        "bf16 streaming does not halve û bytes", model)
+    assert pf["total_bytes"] < it["total_bytes"], model
+    return model
+
+
 def measured_speedups(batch: int = 2):
     """CPU-measured naive vs routed RP step times, incl. the sharded-fused
-    (pallas x L-sharded plan) arm."""
+    (pallas x L-sharded plan) and procedure-fused (fp32 + bf16) arms."""
     reps = 2 if common.smoke() else 5
     mesh = compat.make_mesh((len(jax.devices()),), ("vault",))
     rows = []
@@ -92,19 +135,50 @@ def measured_speedups(batch: int = 2):
             RouterSpec(algorithm="dynamic", backend="pallas",
                        iterations=iters),
             ExecutionPlan(mesh=mesh, axes=(("L", "vault"),)))
+        # procedure-fused arms: the whole-procedure megakernel, fp32 and
+        # bf16 û streaming (DESIGN.md §Procedure-fused)
+        proc = build_router(RouterSpec(
+            algorithm="dynamic", backend="pallas", iterations=iters,
+            fusion="procedure"))
+        proc_bf16 = build_router(RouterSpec(
+            algorithm="dynamic", backend="pallas", iterations=iters,
+            fusion="procedure", stream_dtype="bf16"))
+
+        # measured-output cross-check vs the jnp backend (acceptance:
+        # <=1e-5 for fp32 arms; bf16 delta recorded, not gated)
+        v_jnp = np.asarray(router(u_hat))
+        delta = {
+            arm: float(np.abs(np.asarray(r(u_hat)) - v_jnp).max())
+            for arm, r in (("sharded_fused", sharded_fused),
+                           ("procedure_fused", proc),
+                           ("procedure_fused_bf16", proc_bf16))}
+        for arm in ("sharded_fused", "procedure_fused"):
+            assert delta[arm] <= 1e-5, (name, arm, delta)
 
         t_n = time_stats(jax.jit(naive), u_hat, iters=reps)
         t_f = time_stats(jax.jit(lambda uh: router(uh)), u_hat, iters=reps)
-        t_sf = time_stats(jax.jit(lambda uh: sharded_fused(uh)), u_hat,
-                          iters=reps)
+        t_sf = kernel_arm_stats(jax.jit(lambda uh: sharded_fused(uh)),
+                                u_hat, iters=reps)
+        t_p = kernel_arm_stats(jax.jit(lambda uh: proc(uh)), u_hat,
+                               iters=reps)
+        t_pb = kernel_arm_stats(jax.jit(lambda uh: proc_bf16(uh)), u_hat,
+                                iters=reps)
+        resolved = proc.resolve(u_hat)
         rows.append({"network": name,
                      "shape": {"B": B, "L": L, "H": H, "C": C,
                                "iters": iters},
                      "naive": t_n, "router_jnp": t_f,
                      "sharded_fused": t_sf,
+                     "procedure_fused": t_p,
+                     "procedure_fused_bf16": t_pb,
+                     "resolved_fusion": resolved.fusion,
+                     "max_abs_delta_vs_jnp": delta,
+                     "dma_model": dma_model_row(B, L, H, C, iters),
                      "speedup": t_n["median_s"] / t_f["median_s"],
                      "sharded_fused_speedup":
-                         t_n["median_s"] / t_sf["median_s"]})
+                         t_n["median_s"] / t_sf["median_s"],
+                     "procedure_fused_speedup":
+                         t_n["median_s"] / t_p["median_s"]})
     return rows
 
 
@@ -143,20 +217,48 @@ def modeled_speedups():
     return rows
 
 
+def _kernel_config(measured) -> dict:
+    """Provenance block: the l_tile each pallas arm's auto-picker chose per
+    network and stream dtype (the knobs that shape the BlockSpecs) — read
+    from the same ops helpers the wrappers call, so it cannot drift."""
+    out = {}
+    for r in measured:
+        s = r["shape"]
+        dims = (s["B"], s["L"], s["H"], s["C"])
+        out[r["network"]] = {
+            "l_tile_fp32": rt_ops.auto_l_tile(*dims, "fp32"),
+            "l_tile_bf16": rt_ops.auto_l_tile(*dims, "bf16"),
+            "procedure_l_tile_fp32": rt_ops.procedure_l_tile(*dims, "fp32"),
+            "procedure_l_tile_bf16": rt_ops.procedure_l_tile(*dims, "bf16"),
+        }
+    return {"l_tile": out, "stream_dtypes": ["fp32", "bf16"]}
+
+
 def main():
     measured = measured_speedups()
     print("== measured (CPU): naive vs routed RP schedule ==")
-    print("network,naive_s,router_jnp_s,sharded_fused_s,speedup,"
-          "sharded_fused_speedup")
+    print("network,naive_s,router_jnp_s,sharded_fused_s,procedure_fused_s,"
+          "procedure_bf16_s,speedup,sharded_fused_speedup,"
+          "procedure_fused_speedup")
     for r in measured:
         print(f"{r['network']},{r['naive']['median_s']:.4f},"
               f"{r['router_jnp']['median_s']:.4f},"
               f"{r['sharded_fused']['median_s']:.4f},"
-              f"{r['speedup']:.2f},{r['sharded_fused_speedup']:.2f}")
+              f"{r['procedure_fused']['median_s']:.4f},"
+              f"{r['procedure_fused_bf16']['median_s']:.4f},"
+              f"{r['speedup']:.2f},{r['sharded_fused_speedup']:.2f},"
+              f"{r['procedure_fused_speedup']:.2f}")
     print("# (CPU wall-time is a weak proxy — XLA CPU fuses the naive "
-          "form too, and the sharded-fused arm runs Pallas in interpret "
-          "mode; the traffic claim is the kernel DMA model, "
+          "form too, and every pallas arm runs in interpret mode "
+          "[modeled_only]; the traffic claim is the kernel DMA model, "
           "kernels/routing/ops.py::dma_bytes_per_call)")
+    d0 = measured[0]["dma_model"]
+    print(f"# DMA model ({measured[0]['network']}): iteration-fused "
+          f"{d0['iteration_fused']['total_bytes']:,}B -> procedure-fused "
+          f"{d0['procedure_fused_fp32']['total_bytes']:,}B (roundtrip "
+          f"{d0['iteration_fused']['roundtrip_bytes']:,}B -> "
+          f"{d0['procedure_fused_fp32']['roundtrip_bytes']:,}B), bf16 û "
+          f"stream {d0['procedure_fused_bf16']['u_hat_stream_bytes']:,}B")
     print()
     modeled = modeled_speedups()
     print("== modeled (paper Table-4 coefficients): GPU vs PIM RP ==")
@@ -173,8 +275,8 @@ def main():
             "config": {"device": jax.default_backend(),
                        "n_devices": len(jax.devices()),
                        "sharded_fused_plan": [["L", "vault"]],
-                       "pallas_interpret":
-                           jax.default_backend() != "tpu"},
+                       "pallas_interpret": kernels.pallas_interpret_mode(),
+                       "kernel": _kernel_config(measured)},
             "measured": measured,
             "modeled": modeled,
             "geomean_modeled_speedup": geomean}

@@ -41,5 +41,19 @@ def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
     return time_stats(fn, *args, warmup=warmup, iters=iters)["median_s"]
 
 
+def kernel_arm_stats(fn: Callable, *args, warmup: int = 2,
+                     iters: int = 5) -> dict:
+    """``time_stats`` for a Pallas-backed benchmark arm, plus a
+    ``modeled_only`` flag: off-TPU the kernels run in *interpret mode*, so
+    the wall-clock documents plumbing, not performance — trajectory tooling
+    must never read an interpret-mode arm as a hardware (anti-)speedup (the
+    perf claim is the DMA model, kernels/routing/ops.py::dma_bytes_per_call).
+    """
+    from repro import kernels
+    stats = time_stats(fn, *args, warmup=warmup, iters=iters)
+    stats["modeled_only"] = kernels.pallas_interpret_mode()
+    return stats
+
+
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"

@@ -33,11 +33,25 @@ BENCHES = ("layer_breakdown", "rp_speedup", "distribution", "accuracy",
            "scaling", "pipeline", "serving", "roofline")
 
 
+def _provenance() -> dict:
+    """Execution-environment block stamped into every artifact: which jax
+    backend timed the numbers and whether pallas arms ran in interpret mode
+    (off-TPU they always do — those arms are modeled_only, never hardware
+    measurements)."""
+    import jax
+
+    from repro import kernels
+    return {"jax_backend": jax.default_backend(),
+            "n_devices": len(jax.devices()),
+            "pallas_interpret": kernels.pallas_interpret_mode()}
+
+
 def write_artifact(name: str, payload: dict, smoke: bool) -> str:
     """Persist one bench's machine-readable results as BENCH_<name>.json."""
     path = f"BENCH_{name}.json"
     doc = {"bench": name, "smoke": smoke,
-           "schema": "benchmarks/README.md", **payload}
+           "schema": "benchmarks/README.md",
+           "provenance": _provenance(), **payload}
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True, default=float)
         f.write("\n")

@@ -14,6 +14,12 @@ echo "== docs: DESIGN.md section cross-references =="
 python scripts/check_docs.py
 
 if [[ "${1:-}" != "--fast" ]]; then
+  echo "== parity: procedure-fused megakernel vs jnp backend =="
+  python -m pytest -q \
+    "tests/test_kernels.py::test_routing_procedure_fused_vs_jnp" \
+    "tests/test_kernels.py::test_routing_procedure_matches_iteration_fused" \
+    "tests/test_router.py::test_fusion_procedure_matches_jnp"
+
   echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
   PYTHONPATH=src python examples/quickstart.py
 
@@ -31,17 +37,31 @@ if [[ "${1:-}" != "--fast" ]]; then
   python - <<'EOF'
 import json, sys
 d = json.load(open("BENCH_rp_speedup.json"))
-for key in ("bench", "smoke", "config", "measured", "modeled",
+for key in ("bench", "smoke", "config", "provenance", "measured", "modeled",
             "geomean_modeled_speedup"):
     assert key in d, f"BENCH_rp_speedup.json missing {key!r}"
 assert d["bench"] == "rp_speedup"
+assert "kernel" in d["config"], "config missing kernel l_tile provenance"
 arms = d["measured"]
 assert arms, "no measured rows"
 for row in arms:
-    for arm in ("naive", "router_jnp", "sharded_fused"):
+    for arm in ("naive", "router_jnp", "sharded_fused", "procedure_fused",
+                "procedure_fused_bf16"):
         assert row[arm]["median_s"] > 0, (arm, row)
+    # interpret-mode (CPU) pallas arms must be flagged modeled_only so
+    # their wall-clock is never read as a hardware regression
+    if d["provenance"]["pallas_interpret"]:
+        for arm in ("sharded_fused", "procedure_fused",
+                    "procedure_fused_bf16"):
+            assert row[arm]["modeled_only"] is True, (arm, row)
+    dma = row["dma_model"]
+    it, pf = dma["iteration_fused"], dma["procedure_fused_fp32"]
+    assert pf["roundtrip_bytes"] < it["roundtrip_bytes"], dma
+    assert (2 * dma["procedure_fused_bf16"]["u_hat_stream_bytes"]
+            == pf["u_hat_stream_bytes"]), dma
+    assert row["max_abs_delta_vs_jnp"]["procedure_fused"] <= 1e-5, row
 print("BENCH_rp_speedup.json OK:", len(arms), "measured row(s),",
-      "sharded-fused arm present")
+      "sharded-fused + procedure-fused (fp32/bf16) arms present")
 EOF
 
   echo "== smoke: repro.launch.serve_caps --smoke (continuous batching) =="

@@ -16,10 +16,13 @@ Three orthogonal choices compose:
     [Sabour et al. 2017] or "em" [Hinton et al. 2018], both over the common
     (B, L, H, C) vote layout) and a kernel backend ("jnp" | "pallas"; the
     Pallas backend replaces the old ``RoutingConfig.fused`` bool and runs
-    the fused-iteration kernel, in interpret mode off-TPU).  With a sharded
-    plan the Pallas backend switches to the stage-split sharded-fused form:
-    per-shard Pallas stages with cross-shard psums at the paper's Table-2
-    aggregation points (DESIGN.md §Sharded-fused).
+    the fused kernels, in interpret mode off-TPU).  The ``fusion`` knob
+    picks between the whole-procedure megakernel and the per-iteration
+    kernel (DESIGN.md §Procedure-fused), ``stream_dtype`` selects fp32 or
+    bf16 û streaming.  With a sharded plan the Pallas backend switches to
+    the stage-split sharded-fused form: per-shard Pallas stages with
+    cross-shard psums at the paper's Table-2 aggregation points (DESIGN.md
+    §Sharded-fused).
   * ExecutionPlan — WHERE/HOW to run it: unsharded, one dim sharded over a
     mesh axis (the paper's inter-vault distribution), several dims at once
     (2D torus), or the paper's §4 host||PIM two-stage pipeline.  With
@@ -41,7 +44,7 @@ from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro import compat, kernels
 from repro.core import distribution as dist_lib
 from repro.core import em_routing as em_lib
 from repro.core import pipeline as pipeline_lib
@@ -60,9 +63,19 @@ class RouterSpec(NamedTuple):
     """Static routing specification (hashable; safe as a jit static arg).
 
     algorithm: registry name ("dynamic" | "em" | user-registered).
-    backend:   "jnp" (pure-XLA path) or "pallas" (fused-iteration kernel;
-               replaces the old ``RoutingConfig.fused`` bool; composes with
-               sharded plans via the stage-split sharded-fused form).
+    backend:   "jnp" (pure-XLA path) or "pallas" (fused kernels; replaces
+               the old ``RoutingConfig.fused`` bool; composes with sharded
+               plans via the stage-split sharded-fused form).
+    fusion:    pallas-backend fusion level (DESIGN.md §Procedure-fused):
+               "auto" (default — whole-procedure megakernel when the plan
+               is shard-local and the VMEM model fits, per-iteration kernel
+               otherwise), "procedure" (force the megakernel; rejects
+               sharded plans) or "iteration" (force the per-iteration
+               kernel).  Under a sharded plan execution is always the
+               stage-split form; ``resolve()`` reports the concrete level.
+    stream_dtype: dtype û streams HBM→VMEM at on the pallas backend —
+               "fp32" or "bf16" (fp32 in-kernel accumulation either way;
+               bf16 halves the DMA bytes of the only large operand).
     options:   algorithm-specific extras as a sorted (name, value) tuple,
                e.g. (("beta_a", 1.0),) for EM.  Use ``spec.option(name)``.
     """
@@ -71,6 +84,8 @@ class RouterSpec(NamedTuple):
     iterations: int = 3
     use_approx: bool = False
     options: Tuple[Tuple[str, Any], ...] = ()
+    fusion: str = "auto"
+    stream_dtype: str = "fp32"
 
     def option(self, name: str, default: Any = None) -> Any:
         for k, v in self.options:
@@ -136,24 +151,34 @@ def registered_algorithms() -> Tuple[str, ...]:
 # --- "dynamic" [Sabour et al. 2017] — paper Algorithm 1 --------------------
 
 def _pallas_interpret_mode() -> bool:
-    """Capability check for the Pallas backend: compiled pallas_call needs a
-    TPU; everywhere else (CPU/GPU containers, tests) run interpret mode."""
-    return jax.default_backend() != "tpu"
+    """Capability check for the Pallas backend — delegates to the shared
+    probe in ``repro.kernels`` (one helper for all pallas entry points)."""
+    return kernels.pallas_interpret_mode()
 
 
 def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
     (u_hat,) = args
     if spec.backend == "pallas":
         from repro.kernels.routing import ops as routing_ops
-        if axes:
+        form = routing_ops.resolve_fusion(spec.fusion, jnp.shape(u_hat),
+                                          spec.stream_dtype,
+                                          sharded=bool(axes))
+        if form == "stage_split":
             # sharded-fused: stage-split kernels + cross-shard psums at
             # the Table-2 aggregation points (DESIGN.md §Sharded-fused)
             return routing_ops.dynamic_routing_fused_sharded(
                 u_hat, axes=axes, iterations=spec.iterations,
-                use_approx=spec.use_approx,
+                use_approx=spec.use_approx, stream_dtype=spec.stream_dtype,
+                interpret=_pallas_interpret_mode())
+        if form == "procedure":
+            # whole-procedure megakernel (DESIGN.md §Procedure-fused)
+            return routing_ops.dynamic_routing_procedure_fused(
+                u_hat, iterations=spec.iterations,
+                use_approx=spec.use_approx, stream_dtype=spec.stream_dtype,
                 interpret=_pallas_interpret_mode())
         return routing_ops.dynamic_routing_fused(
             u_hat, iterations=spec.iterations, use_approx=spec.use_approx,
+            stream_dtype=spec.stream_dtype,
             interpret=_pallas_interpret_mode())
     cfg = routing_lib.RoutingConfig(
         iterations=spec.iterations, use_approx=spec.use_approx,
@@ -343,6 +368,28 @@ def plan_axes(spec: RouterSpec, plan: ExecutionPlan,
 # build_router
 # ---------------------------------------------------------------------------
 
+class ResolvedPlan(tuple):
+    """``Router.resolve()`` result: behaves exactly like the historical
+    tuple of concrete (dim, mesh_axis) pairs (len / indexing / iteration),
+    plus the resolved kernel execution attributes:
+
+    fusion:       "procedure" | "iteration" | "stage_split" — the concrete
+                  kernel form a pallas-backend router will run (DESIGN.md
+                  §Procedure-fused); None for the jnp backend.
+    stream_dtype: "fp32" | "bf16" û streaming dtype; None for jnp.
+    """
+
+    def __new__(cls, axes=(), fusion=None, stream_dtype=None):
+        self = super().__new__(cls, tuple(axes))
+        self.fusion = fusion
+        self.stream_dtype = stream_dtype
+        return self
+
+    def __repr__(self):
+        return (f"ResolvedPlan(axes={tuple(self)}, fusion={self.fusion!r}, "
+                f"stream_dtype={self.stream_dtype!r})")
+
+
 class Router:
     """The callable built by ``build_router`` — also carries its spec/plan
     and exposes ``resolve(*args)`` so callers can inspect the concrete
@@ -357,16 +404,40 @@ class Router:
 
     # -- plan resolution ----------------------------------------------------
 
-    def resolve(self, *args) -> Tuple[Tuple[str, str], ...]:
-        """Concrete (dim, mesh_axis) pairs for these inputs.
+    def resolve(self, *args) -> ResolvedPlan:
+        """Concrete execution for these inputs: a ``ResolvedPlan`` — a tuple
+        of (dim, mesh_axis) pairs (backward compatible) carrying the
+        resolved ``fusion`` level and ``stream_dtype`` as attributes.
 
         With a pipeline plan the distribution lives inside the routing
         stage, so resolution runs against the stage_a output (votes) shape
         of one microbatch, not the stacked pipeline inputs.
         """
         if self.plan.pipeline is not None:
-            return self._resolve_shapes((self._hidden_struct(args[0]).shape,))
-        return self._resolve_shapes(tuple(jnp.shape(a) for a in args))
+            shapes = (self._hidden_struct(args[0]).shape,)
+        else:
+            shapes = tuple(jnp.shape(a) for a in args)
+        axes = self._resolve_shapes(shapes)
+        return ResolvedPlan(axes, *self._resolve_fusion(axes, shapes))
+
+    def _resolve_fusion(self, axes, shapes):
+        """(fusion, stream_dtype) the pallas backend will execute with —
+        the same ``resolve_fusion`` the run path calls, so the report can
+        never drift from execution.  jnp backend: (None, None); a no-arg
+        ``resolve()`` (historically legal for static plans) reports None
+        for fusion when the "auto" fit check would need the votes shape."""
+        if self.spec.backend != "pallas":
+            return None, None
+        if self.spec.algorithm != "dynamic":
+            return "stage_split", "fp32"   # EM: stage-split is the only form
+        if not shapes and not axes and self.spec.fusion == "auto":
+            return None, self.spec.stream_dtype
+        from repro.kernels.routing import ops as routing_ops
+        form = routing_ops.resolve_fusion(self.spec.fusion,
+                                          shapes[0] if shapes else None,
+                                          self.spec.stream_dtype,
+                                          sharded=bool(axes))
+        return form, self.spec.stream_dtype
 
     def _resolve_shapes(self, shapes: tuple) -> Tuple[Tuple[str, str], ...]:
         if not self.plan.auto:
@@ -493,11 +564,16 @@ class Router:
     def __repr__(self):
         return (f"Router(algorithm={self.spec.algorithm!r}, "
                 f"backend={self.spec.backend!r}, "
+                f"fusion={self.spec.fusion!r}, "
+                f"stream_dtype={self.spec.stream_dtype!r}, "
                 f"plan={'auto' if self.plan.auto else self.plan.axes}, "
                 f"pipeline={self.plan.pipeline!r})")
 
 
 def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
+    # fusion / stream-dtype vocabularies live with the kernels (ops.py is
+    # the single source of truth); imported lazily like every kernel use.
+    from repro.kernels.routing import ops as routing_ops
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}; expected one "
                          f"of {BACKENDS}")
@@ -506,6 +582,29 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             f"algorithm {algo.name!r} has no {spec.backend!r} backend "
             f"(supported: {algo.backends}); register a kernel for it or "
             "use backend='jnp'")
+    if spec.fusion not in routing_ops.FUSION_LEVELS:
+        raise ValueError(f"unknown fusion level {spec.fusion!r}; expected "
+                         f"one of {routing_ops.FUSION_LEVELS}")
+    if spec.stream_dtype not in routing_ops.STREAM_DTYPES:
+        raise ValueError(f"unknown stream_dtype {spec.stream_dtype!r}; "
+                         f"expected one of "
+                         f"{tuple(sorted(routing_ops.STREAM_DTYPES))}")
+    _pallas_dynamic = spec.backend == "pallas" and algo.name == "dynamic"
+    if spec.fusion != "auto" and not _pallas_dynamic:
+        raise ValueError(
+            f"fusion={spec.fusion!r} is a pallas-backend knob of the "
+            "'dynamic' algorithm (EM and the jnp backend have no fused "
+            "megakernel); leave fusion='auto'")
+    if spec.stream_dtype != "fp32" and not _pallas_dynamic:
+        raise ValueError(
+            f"stream_dtype={spec.stream_dtype!r} requires the 'dynamic' "
+            "algorithm on the pallas backend (the jnp path and the EM "
+            "kernels stream fp32)")
+    if spec.fusion == "procedure" and plan.axes:
+        raise ValueError(
+            "fusion='procedure' is shard-local (the megakernel keeps b/v/s "
+            "in VMEM across iterations and cannot surface for the Table-2 "
+            "psums); use fusion='auto' or 'iteration' with sharded plans")
     bad = [d for d, _ in plan.axes if d not in algo.sharded_dims]
     if bad:
         raise ValueError(

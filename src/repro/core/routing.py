@@ -117,8 +117,9 @@ def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
     is the routed H-capsule output.
     """
     if cfg.fused:
+        from repro import kernels
         from repro.kernels.routing import ops as routing_ops
-        interpret = jax.default_backend() != "tpu"
+        interpret = kernels.pallas_interpret_mode()
         axes = dict(cfg.axes or ())
         if not axes and cfg.sharded_dim is not None:
             axes = {cfg.sharded_dim: cfg.axis_name}
@@ -134,6 +135,16 @@ def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
             u_hat, iterations=cfg.iterations, use_approx=cfg.use_approx,
             interpret=interpret)
 
+    v, _ = _scan_routing(u_hat, cfg)
+    return v
+
+
+def _scan_routing(u_hat: jax.Array, cfg: RoutingConfig
+                  ) -> tuple[jax.Array, jax.Array]:
+    """The jnp iteration loop shared by ``dynamic_routing`` and
+    ``dynamic_routing_with_stats``: a ``lax.scan`` carrying b, so the trace
+    stays one iteration long no matter how many iterations run.  Returns
+    (final v, final b)."""
     u_hat = u_hat.astype(jnp.float32)
     B, L, H, C = u_hat.shape
     b0 = jnp.zeros((L, H), jnp.float32)
@@ -142,19 +153,16 @@ def dynamic_routing(u_hat: jax.Array, cfg: RoutingConfig = RoutingConfig()
         v, b_new = routing_iteration(u_hat, b, cfg)
         return b_new, v
 
-    _, vs = lax.scan(step, b0, None, length=cfg.iterations)
-    return vs[-1]
+    b, vs = lax.scan(step, b0, None, length=cfg.iterations)
+    return vs[-1], b
 
 
 def dynamic_routing_with_stats(u_hat: jax.Array,
                                cfg: RoutingConfig = RoutingConfig()):
-    """Like ``dynamic_routing`` but also returns (b, c) for inspection/tests."""
-    u_hat = u_hat.astype(jnp.float32)
-    B, L, H, C = u_hat.shape
-    b = jnp.zeros((L, H), jnp.float32)
-    v = jnp.zeros((B, H, C), jnp.float32)
-    for _ in range(cfg.iterations):
-        v, b = routing_iteration(u_hat, b, cfg)
+    """Like ``dynamic_routing`` but also returns (b, c) for inspection/tests
+    (jnp path only — the fused kernels keep b on-chip).  Shares the
+    scan-based loop with ``dynamic_routing``."""
+    v, b = _scan_routing(u_hat, cfg)
     return v, b, _softmax(b, cfg)
 
 

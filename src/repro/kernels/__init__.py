@@ -8,3 +8,13 @@ Each subpackage follows the repo convention:
 Kernels are written for TPU as the *target* and validated with
 ``interpret=True`` on CPU (this container has no TPU).
 """
+from __future__ import annotations
+
+import jax
+
+
+def pallas_interpret_mode() -> bool:
+    """Capability probe shared by every pallas entry point: compiled
+    ``pallas_call`` needs a TPU; everywhere else (CPU/GPU containers, tests)
+    kernels run in interpret mode — same code path, interpreted."""
+    return jax.default_backend() != "tpu"

@@ -1,14 +1,31 @@
-"""Fused dynamic-routing iteration as a Pallas TPU kernel.
+"""Fused dynamic-routing kernels (per-iteration and whole-procedure) as
+Pallas TPU kernels.
 
 Paper hook (§5.2, DESIGN.md §2): the intra-vault PEs process the RP chain next
-to the data so intermediates never cross the off-chip boundary.  The TPU-native
-equivalent: one ``pallas_call`` per routing iteration that streams the only
-large operand — the prediction vectors ``u_hat`` (B,L,H,C) — HBM→VMEM exactly
-once, and keeps every intermediate (b-update, softmax, weighted partial sums)
-VMEM-resident.  The naive formulation (ref.py / the paper's GPU baseline)
-materialises O(B·L·H·C) intermediates per iteration *twice* (c·û products and
-agreement tensors) and re-reads û twice; this kernel reads û once and writes
-nothing but the (L,H) logits and (B,H,C) partial sums.
+to the data so intermediates never cross the off-chip boundary.  Two TPU-native
+forms live here:
+
+* ``routing_iteration_fused`` — one ``pallas_call`` per routing iteration that
+  streams the only large operand — the prediction vectors ``u_hat`` (B,L,H,C)
+  — HBM→VMEM exactly once, and keeps every intermediate (b-update, softmax,
+  weighted partial sums) VMEM-resident.  The (L,H) logits and (B,H,C) vote
+  sums still surface to HBM between iterations and squash runs outside.
+* ``routing_procedure_fused`` — ONE ``pallas_call`` for the *whole* procedure
+  (DESIGN.md §Procedure-fused): grid = (iterations, num_L_tiles) with the
+  logits ``b`` (L,H), the previous-iteration ``v`` and the vote-sum
+  accumulator ``s`` (B,H,C each) held in VMEM *scratch* across all grid
+  steps; squash (Eq.3) runs in-kernel at the last L-tile of each iteration.
+  Nothing but the final v (B,H,C) ever crosses back to HBM — the paper's
+  "intermediates never leave the vault" claim, whole-procedure.  û is passed
+  lane-packed as (B, L, H·C) so the streamed operand's trailing dim fills
+  the 128-lane vregs (C alone, 8..16, under-fills them), and may be streamed
+  in bf16 (``stream_dtype``) with fp32 in-kernel accumulation — halving the
+  DMA bytes of the memory-bound operand.
+
+The naive formulation (ref.py / the paper's GPU baseline) materialises
+O(B·L·H·C) intermediates per iteration *twice* (c·û products and agreement
+tensors) and re-reads û twice; both fused forms read û once per iteration and
+write nothing bigger than (B,H,C)/(L,H).
 
 Lazy-update schedule (proved equivalent in ref.py): when a tile of L rows is
 resident for iteration t we first fold in iteration t-1's agreement update for
@@ -16,15 +33,8 @@ those rows (db = Σ_k û·v_prev), then softmax, then accumulate s.  This is wha
 collapses two û passes per iteration into one.
 
 Arithmetic intensity of the fused op: 4 FLOP per 4-byte û element — firmly
-memory-bound, matching the paper's characterisation; the kernel therefore
-optimises DMA volume, not MXU utilisation.
-
-Grid/BlockSpec: grid = (num_L_tiles,); û block (B, L_t, H, C) with (H, C) as
-the tiled trailing dims; s output block (B, H, C) maps every grid step to the
-same block and is accumulated in place (init at step 0).  TPU layout note:
-C (the capsule dim, 8..16) under-fills the 128-lane vregs; a lane-packed
-(B, L_t, H·C) variant avoiding the relayout is noted as future work — the
-kernel is bandwidth-bound either way (see §Perf).
+memory-bound, matching the paper's characterisation; the kernels therefore
+optimise DMA volume, not MXU utilisation.
 """
 from __future__ import annotations
 
@@ -34,6 +44,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.approx import (EXP_AVG, EXP_RECOVERY, INV_SQRT_RECOVERY,
                                LOG2E, RECIP_RECOVERY, _F32_BIAS, _F32_MANT)
@@ -71,6 +82,25 @@ def _squash_inkernel(s, use_approx: bool):
     return s * (n2 / (1.0 + n2)) / jnp.sqrt(n2 + 1e-9)
 
 
+def _softmax_h_inkernel(b, use_approx: bool):
+    """Eq.5 softmax over the trailing H dim (rows independent; H resident)."""
+    m = jnp.max(b, axis=-1, keepdims=True)
+    if use_approx:
+        e = _fast_exp_inkernel(b - m)
+        return e * _fast_recip_inkernel(jnp.sum(e, axis=-1, keepdims=True))
+    e = jnp.exp(b - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _as_stream(u_hat: jax.Array) -> jax.Array:
+    """Kernels stream û in its incoming dtype (fp32 or bf16 — the caller
+    hoists the stream-dtype cast out of the iteration loop); anything else
+    is promoted to fp32.  All in-kernel accumulation is fp32."""
+    if u_hat.dtype in (jnp.float32, jnp.bfloat16):
+        return u_hat
+    return u_hat.astype(jnp.float32)
+
+
 def _routing_iter_kernel(u_ref, b_ref, v_ref, s_ref, b_out_ref, *,
                          use_approx: bool):
     """One grid step = one L tile.
@@ -90,13 +120,7 @@ def _routing_iter_kernel(u_ref, b_ref, v_ref, s_ref, b_out_ref, *,
     b_out_ref[...] = b_new
 
     # --- Eq.5 softmax over H (rows independent; H fully resident)
-    m = jnp.max(b_new, axis=-1, keepdims=True)
-    if use_approx:
-        e = _fast_exp_inkernel(b_new - m)
-        c = e * _fast_recip_inkernel(jnp.sum(e, axis=-1, keepdims=True))
-    else:
-        e = jnp.exp(b_new - m)
-        c = e / jnp.sum(e, axis=-1, keepdims=True)           # (L_t, H)
+    c = _softmax_h_inkernel(b_new, use_approx)               # (L_t, H)
 
     # --- Eq.2 partial weighted sum: s[k,h,c] += sum_l c[l,h]·û[k,l,h,c]
     s_part = jnp.sum(u * c[None, :, :, None], axis=1)        # (B, H, C)
@@ -143,9 +167,114 @@ def routing_iteration_fused(u_hat: jax.Array, b: jax.Array, v_prev: jax.Array,
             jax.ShapeDtypeStruct((L, H), jnp.float32),
         ],
         interpret=interpret,
-    )(u_hat.astype(jnp.float32), b.astype(jnp.float32),
+    )(_as_stream(u_hat), b.astype(jnp.float32),
       v_prev.astype(jnp.float32))
     return s, b_new
+
+
+# ---------------------------------------------------------------------------
+# Whole-procedure megakernel (DESIGN.md §Procedure-fused)
+# ---------------------------------------------------------------------------
+
+
+def _routing_procedure_kernel(u_ref, v_out_ref, b_scr, v_scr, s_scr, *,
+                              h: int, c_dim: int, l_tile: int,
+                              n_l_tiles: int, iterations: int,
+                              use_approx: bool):
+    """One grid step = one (iteration, L-tile) cell; grid is row-major so the
+    L-tiles of iteration t all run before iteration t+1.
+
+    u_ref:     (B, L_t, H·C) lane-packed û tile (streamed, read once per
+               iteration; bf16 or fp32 — cast to fp32 on register load)
+    v_out_ref: (B, H, C) final routed output (written at the last grid step)
+    b_scr:     (L, H) routing logits       — VMEM-resident ALL iterations
+    v_scr:     (B, H, C) previous v        — VMEM-resident ALL iterations
+    s_scr:     (B, H, C) vote-sum accum    — VMEM-resident ALL iterations
+
+    Unlike the per-iteration kernel, b/v/s never cross back to HBM between
+    iterations and squash (Eq.3) runs in-kernel at the last L-tile of each
+    iteration — the only HBM write of the whole procedure is the final v.
+    """
+    it = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((it == 0) & (j == 0))
+    def _reset():
+        # iteration 0 of the lazy-update schedule starts from b = 0 and
+        # v_prev = 0 (ref.py proves this equals Algorithm 1's eager form).
+        b_scr[...] = jnp.zeros_like(b_scr)
+        v_scr[...] = jnp.zeros_like(v_scr)
+
+    u = u_ref[...].astype(jnp.float32)           # fp32 accumulation
+    batch = u.shape[0]
+    u = u.reshape(batch, l_tile, h, c_dim)       # unpack lanes -> (H, C)
+    v_prev = v_scr[...]
+
+    # --- deferred Eq.4: db[l,h] = sum_{k,c} û[k,l,h,c] * v_prev[k,h,c]
+    db = jnp.sum(u * v_prev[:, None], axis=(0, 3))           # (L_t, H)
+    rows = pl.ds(j * l_tile, l_tile)
+    b_new = b_scr[rows, :] + db
+    b_scr[rows, :] = b_new
+
+    # --- Eq.5 softmax + Eq.2 partial weighted sum, accumulated in scratch
+    coup = _softmax_h_inkernel(b_new, use_approx)            # (L_t, H)
+    s_part = jnp.sum(u * coup[None, :, :, None], axis=1)     # (B, H, C)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s_part
+
+    @pl.when(j != 0)
+    def _acc():
+        s_scr[...] += s_part
+
+    # --- Eq.3 squash in-kernel at the last L-tile of the iteration
+    @pl.when(j == n_l_tiles - 1)
+    def _finish_iteration():
+        v = _squash_inkernel(s_scr[...], use_approx)
+        v_scr[...] = v
+
+        @pl.when(it == iterations - 1)
+        def _emit():
+            v_out_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "l_tile",
+                                             "use_approx", "interpret"))
+def routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
+                            l_tile: int = 128, use_approx: bool = False,
+                            interpret: bool = True) -> jax.Array:
+    """Whole routing procedure in ONE pallas_call.  Returns v (B, H, C).
+
+    u_hat: (B, L, H, C) in fp32 or bf16 — the *input dtype* is the stream
+    dtype (ops.py::dynamic_routing_procedure_fused picks it); all in-kernel
+    arithmetic and the b/v/s scratch are fp32.  VMEM working set:
+    2·B·l_tile·H·C·itemsize (double-buffered û) + L·H·4 (b) +
+    3·B·H·C·4 (v, s, out) — see ops.py::procedure_vmem_bytes.
+    """
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    if u_hat.dtype not in (jnp.float32, jnp.bfloat16):
+        u_hat = u_hat.astype(jnp.float32)
+    u_packed = u_hat.reshape(B, L, H * C)        # lane-packed stream layout
+    grid = (iterations, L // l_tile)
+    kernel = functools.partial(
+        _routing_procedure_kernel, h=H, c_dim=C, l_tile=l_tile,
+        n_l_tiles=L // l_tile, iterations=iterations, use_approx=use_approx)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((B, l_tile, H * C), lambda it, j: (0, j, 0))],
+        out_specs=pl.BlockSpec((B, H, C), lambda it, j: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((L, H), jnp.float32),     # b   — all iterations
+            pltpu.VMEM((B, H, C), jnp.float32),  # v   — all iterations
+            pltpu.VMEM((B, H, C), jnp.float32),  # s   — per-iteration accum
+        ],
+        interpret=interpret,
+    )(u_packed)
 
 
 # ---------------------------------------------------------------------------
@@ -190,6 +319,36 @@ def _stage_votes_kernel(u_ref, c_ref, s_ref):
         s_ref[...] += s_part
 
 
+def _stage_update_fold_kernel(u_ref, s_ref, b_ref, v_ref, b_out_ref, c_ref, *,
+                              use_approx: bool):
+    """STAGE 2 with the next iteration's softmax folded in (the
+    iteration-resident treatment extended to the stage-split path): legal
+    only when neither B nor H is sharded — a B-shard would need the db psum
+    *before* the b-update and an H-shard a cross-shard softmax denominator,
+    both of which must happen on the host between stages.
+
+    u_ref:     (B, L_t, H, C) û tile (streamed, read once)
+    s_ref:     (B, H, C) complete vote-sums (post cross-shard psum)
+    b_ref:     (L_t, H) current logits tile
+    v_ref:     (B, H, C) squashed output (written at step 0)
+    b_out_ref: (L_t, H) updated logits
+    c_ref:     (L_t, H) NEXT iteration's coupling coefficients (Eq.5) —
+               replaces the host-side ``_softmax_h`` launch between
+               iterations (O(L·H), folded into the same û pass).
+    """
+    u = u_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)
+    v = _squash_inkernel(s, use_approx)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _write_v():
+        v_ref[...] = v
+
+    b_new = b_ref[...] + jnp.sum(u * v[:, None], axis=(0, 3))
+    b_out_ref[...] = b_new
+    c_ref[...] = _softmax_h_inkernel(b_new, use_approx)
+
+
 def _stage_update_kernel(u_ref, s_ref, v_ref, db_ref, *, use_approx: bool):
     """STAGE 2, one grid step = one L tile: squash + logit update.
 
@@ -228,7 +387,7 @@ def routing_stage_votes(u_hat: jax.Array, c: jax.Array, *, l_tile: int = 128,
         out_specs=pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, C), jnp.float32),
         interpret=interpret,
-    )(u_hat.astype(jnp.float32), c.astype(jnp.float32))
+    )(_as_stream(u_hat), c.astype(jnp.float32))
 
 
 @functools.partial(jax.jit,
@@ -256,7 +415,42 @@ def routing_stage_update(u_hat: jax.Array, s: jax.Array, *, l_tile: int = 128,
             jax.ShapeDtypeStruct((L, H), jnp.float32),
         ],
         interpret=interpret,
-    )(u_hat.astype(jnp.float32), s.astype(jnp.float32))
+    )(_as_stream(u_hat), s.astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l_tile", "use_approx", "interpret"))
+def routing_stage_update_fold(u_hat: jax.Array, s: jax.Array, b: jax.Array,
+                              *, l_tile: int = 128, use_approx: bool = False,
+                              interpret: bool = True):
+    """STAGE 2 + folded Eq.5 wrapper: (û (B,L,H,C), s (B,H,C), b (L,H)) ->
+    (v (B,H,C), b_new (L,H), c_next (L,H)).  Only legal when B and H are
+    unsharded (see _stage_update_fold_kernel)."""
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    kernel = functools.partial(_stage_update_fold_kernel,
+                               use_approx=use_approx)
+    return pl.pallas_call(
+        kernel,
+        grid=(L // l_tile,),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H, C), lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, H, C), lambda i: (0, 0, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+            pl.BlockSpec((l_tile, H), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, C), jnp.float32),
+            jax.ShapeDtypeStruct((L, H), jnp.float32),
+            jax.ShapeDtypeStruct((L, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(_as_stream(u_hat), s.astype(jnp.float32), b.astype(jnp.float32))
 
 
 # --- EM routing stage kernels (same Table-2 structure: the M-step

@@ -1,16 +1,29 @@
 """Jitted public wrappers for the fused routing kernels.
 
-Two execution shapes (DESIGN.md §Sharded-fused):
+Three execution shapes (DESIGN.md §Procedure-fused, §Sharded-fused):
 
-* ``dynamic_routing_fused`` — the single-pass lazy-update kernel; every
-  Table-2 aggregation is shard-local, so it only runs unsharded.
+* ``dynamic_routing_procedure_fused`` — the whole-procedure megakernel: ONE
+  ``pallas_call`` with grid (iterations, L_tiles); b/v/s live in VMEM
+  scratch across all iterations, squash runs in-kernel, and only the final
+  v crosses back to HBM.  Optional bf16 û streaming (fp32 accumulation)
+  halves the DMA bytes of the only large operand.  Shard-local only.
+* ``dynamic_routing_fused`` — the single-pass per-iteration kernel; every
+  Table-2 aggregation is shard-local, so it only runs unsharded.  Kept as
+  the fallback when the procedure kernel's VMEM working set does not fit.
 * ``dynamic_routing_fused_sharded`` / ``em_routing_fused`` — the stage-split
   form: per-shard Pallas stages compute the heavy O(B·L·H·C) passes, and
   this module inserts the cross-shard ``lax.psum`` between them at exactly
   the paper's inter-vault aggregation points.  Both run inside a
   ``shard_map`` body (the Router's ``_core_fn``) or any enclosing ambient
   mesh axes; with no sharded axes the psums are identity and the stage-split
-  form is algebraically identical to the fused kernel.
+  form is algebraically identical to the fused kernel.  When neither B nor
+  H is sharded, the next iteration's Eq.5 softmax folds into the STAGE-2
+  kernel (``routing_stage_update_fold``) — the iteration-resident treatment
+  extended to the distributed path.
+
+``resolve_fusion`` is the single source of truth for the Router's
+``fusion="auto"`` knob: procedure-fusion when the plan is shard-local and
+``procedure_vmem_bytes`` fits the budget, per-iteration fusion otherwise.
 """
 from __future__ import annotations
 
@@ -25,58 +38,190 @@ from repro.core import routing as routing_lib
 from repro.kernels.routing import ref
 from repro.kernels.routing.kernel import (em_stage_estep, em_stage_stats,
                                           routing_iteration_fused,
+                                          routing_procedure_fused,
                                           routing_stage_update,
+                                          routing_stage_update_fold,
                                           routing_stage_votes)
 
+STREAM_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
 
-def _pick_l_tile(L: int, bytes_budget: int, row_bytes: int,
-                 preferred: int = 128) -> int:
-    """Largest divisor of L that is <= preferred and fits the VMEM budget."""
+# û-block VMEM budget for automatic l_tile selection (per buffer; the
+# procedure kernel double-buffers the stream, see procedure_vmem_bytes).
+_U_TILE_BUDGET = 8 * 2 ** 20
+# Total VMEM budget for the procedure megakernel's working set — ~16 MB per
+# v5e core, minus slack for the compiler's own buffers.
+PROCEDURE_VMEM_BUDGET = 14 * 2 ** 20
+
+FUSION_LEVELS = ("auto", "iteration", "procedure")
+
+
+def _stream_itemsize(stream_dtype: str) -> int:
+    if stream_dtype not in STREAM_DTYPES:
+        raise ValueError(f"unknown stream_dtype {stream_dtype!r}; expected "
+                         f"one of {sorted(STREAM_DTYPES)}")
+    return jnp.dtype(STREAM_DTYPES[stream_dtype]).itemsize
+
+
+def pick_l_tile(L: int, bytes_budget: int, row_bytes: int,
+                preferred: int = 128) -> int:
+    """Largest divisor of L that is <= preferred and fits the VMEM budget.
+
+    Divisors are enumerated in O(√L) — each i <= √L with L % i == 0 yields
+    the pair (i, L // i) — instead of the old 1..L scan (L is 10³..10⁴ for
+    the Table-1 networks and this runs at every trace)."""
     cap = max(1, bytes_budget // max(row_bytes, 1))
+    lim = min(preferred, cap)
     best = 1
-    for t in range(1, L + 1):
-        if L % t == 0 and t <= min(preferred, cap):
-            best = t
+    i = 1
+    while i * i <= L:
+        if L % i == 0:
+            for d in (i, L // i):
+                if best < d <= lim:
+                    best = d
+        i += 1
     return best
 
 
-def dma_bytes_per_call(B: int, L: int, H: int, C: int,
-                       iterations: int = 3) -> dict:
-    """HBM<->VMEM traffic of the fused kernel per routing call, derived
-    from its BlockSpecs (kernel.py): per iteration the grid streams the
-    û tile set exactly once (B*L*H*C fp32 read), reads+writes the (L,H)
-    logits, revisits the small (B,H,C) v/s blocks per L-tile step, and the
-    squash runs on (B,H,C) outside.  The naive jnp path (ref.py) touches
-    û twice per iteration (Eq.2 + Eq.4 einsums) plus materialised
-    intermediates — measured ~5x this bound on the pod dry-run
-    (EXPERIMENTS.md §Perf routing cell).
+_pick_l_tile = pick_l_tile    # back-compat alias (pre-PR-4 private name)
+
+
+def auto_l_tile(B: int, L: int, H: int, C: int, stream_dtype: str) -> int:
+    """The l_tile the per-iteration / stage-split wrappers auto-pick —
+    public so benchmarks can record the exact provenance they ran with."""
+    return pick_l_tile(L, _U_TILE_BUDGET,
+                       B * H * C * _stream_itemsize(stream_dtype))
+
+
+_auto_l_tile = auto_l_tile    # internal alias
+
+
+def procedure_vmem_bytes(B: int, L: int, H: int, C: int, l_tile: int,
+                         stream_dtype: str = "fp32") -> int:
+    """VMEM working set of the whole-procedure megakernel: the
+    double-buffered û stream block plus the resident b/v/s scratch and the
+    output block (all fp32 regardless of stream dtype)."""
+    u_blk = B * l_tile * H * C * _stream_itemsize(stream_dtype)
+    return 2 * u_blk + L * H * 4 + 3 * B * H * C * 4
+
+
+def procedure_l_tile(B: int, L: int, H: int, C: int,
+                     stream_dtype: str = "fp32") -> int:
+    """l_tile for the megakernel: unlike the per-iteration pick, the û
+    block budget *shrinks* to whatever the total procedure budget leaves
+    after the resident b/v/s scratch — so a cap-bound (large B·H·C) shape
+    gets a smaller tile instead of disqualifying procedure fusion."""
+    fixed = L * H * 4 + 3 * B * H * C * 4
+    budget = min(_U_TILE_BUDGET,
+                 max(0, PROCEDURE_VMEM_BUDGET - fixed) // 2)
+    return pick_l_tile(L, budget, B * H * C * _stream_itemsize(stream_dtype))
+
+
+def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
+                   sharded: bool = False) -> str:
+    """Resolve a RouterSpec ``fusion`` knob to the concrete kernel form.
+
+    Returns "procedure" | "iteration" for shard-local execution and
+    "stage_split" under a sharded plan (where the per-iteration stage-split
+    kernels are the only legal form — the megakernel cannot surface for the
+    Table-2 psums).  ``fusion="auto"`` picks procedure-fusion whenever the
+    plan is shard-local and ``procedure_vmem_bytes`` at the
+    budget-shrunk ``procedure_l_tile`` fits; ``shape`` is only consulted on
+    that branch.
     """
-    f = 4  # fp32
-    u = B * L * H * C * f
+    if fusion not in FUSION_LEVELS:
+        raise ValueError(f"unknown fusion level {fusion!r}; expected one of "
+                         f"{FUSION_LEVELS}")
+    if sharded:
+        if fusion == "procedure":
+            raise ValueError(
+                "fusion='procedure' is shard-local (the megakernel keeps "
+                "b/v/s in VMEM and cannot surface for the Table-2 psums); "
+                "use fusion='auto' or 'iteration' with sharded plans")
+        return "stage_split"
+    if fusion != "auto":
+        return fusion
+    if shape is None:
+        raise ValueError("fusion='auto' needs the votes shape to resolve")
+    B, L, H, C = shape
+    l_tile = procedure_l_tile(B, L, H, C, stream_dtype)
+    fits = (procedure_vmem_bytes(B, L, H, C, l_tile, stream_dtype)
+            <= PROCEDURE_VMEM_BUDGET)
+    return "procedure" if fits else "iteration"
+
+
+def dma_bytes_per_call(B: int, L: int, H: int, C: int,
+                       iterations: int = 3, *, form: str = "iteration",
+                       stream_dtype: str = "fp32") -> dict:
+    """HBM<->VMEM traffic per routing call, derived from the BlockSpecs of
+    each kernel form (kernel.py):
+
+    * ``iteration`` — per iteration the grid streams the û tile set once
+      (B·L·H·C at the stream itemsize), reads+writes the (L,H) logits and
+      the (B,H,C) v/s blocks, and the host squash round-trips (B,H,C) twice
+      more: roundtrip = iterations · (2·LH + 4·BHC) · 4.
+    * ``procedure`` — û still streams once per iteration (it does not fit
+      VMEM), but b/v/s stay in scratch across ALL iterations and squash is
+      in-kernel, so the only non-stream traffic is the single final v
+      write: roundtrip = BHC · 4.  This is exactly the (L,H)/(B,H,C)
+      round-trip traffic the megakernel eliminates.
+    * ``stage_split`` — û crosses twice per iteration (once per stage; the
+      price of distribution) and the inter-stage tensors cross at each
+      host/psum boundary: c and db written+read (4·LH), b read+written
+      (2·LH), s written+read and v written (3·BHC) per iteration.
+
+    bf16 streaming (``stream_dtype="bf16"``) halves the û term — the only
+    O(B·L·H·C) one — and leaves the fp32 roundtrip terms unchanged.
+
+    The naive jnp path (ref.py) touches û twice per iteration (Eq.2 + Eq.4
+    einsums) plus materialised intermediates — measured ~5x the fused bound
+    on the pod dry-run (EXPERIMENTS.md §Perf routing cell).
+    """
+    f = 4  # fp32: logits / vote-sum / output blocks are always fp32
+    u = B * L * H * C * _stream_itemsize(stream_dtype)
     bh = L * H * f
     vhc = B * H * C * f
-    per_iter = u + 2 * bh + 2 * vhc + 2 * vhc  # û once, b rw, s acc, v read
-    return {"fused_bytes": iterations * per_iter,
-            "naive_bytes": iterations * (2 * u + 2 * bh + 4 * vhc
-                                         + 2 * B * L * H * f),
-            "u_hat_bytes": u}
+    if form == "iteration":
+        u_stream = iterations * u
+        roundtrip = iterations * (2 * bh + 4 * vhc)
+    elif form == "procedure":
+        u_stream = iterations * u
+        roundtrip = vhc
+    elif form == "stage_split":
+        u_stream = iterations * 2 * u
+        roundtrip = iterations * (6 * bh + 3 * vhc)
+    else:
+        raise ValueError(f"unknown form {form!r}; expected 'iteration', "
+                         "'procedure' or 'stage_split'")
+    u_f32 = B * L * H * C * 4
+    return {
+        "form": form,
+        "stream_dtype": stream_dtype,
+        "u_hat_stream_bytes": u_stream,
+        "roundtrip_bytes": roundtrip,
+        "total_bytes": u_stream + roundtrip,
+        "u_hat_bytes": u_f32,
+        "naive_bytes": iterations * (2 * u_f32 + 2 * bh + 4 * vhc
+                                     + 2 * B * L * H * f),
+    }
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
-                                             "l_tile", "interpret"))
+                                             "l_tile", "stream_dtype",
+                                             "interpret"))
 def dynamic_routing_fused(u_hat: jax.Array, *, iterations: int = 3,
                           use_approx: bool = False, l_tile: int | None = None,
+                          stream_dtype: str = "fp32",
                           interpret: bool = True) -> jax.Array:
     """Full routing procedure built from the fused per-iteration kernel.
 
     u_hat: (B, L, H, C) -> v: (B, H, C).  û crosses HBM→VMEM once per
-    iteration; squash (Eq.3, O(B·H·C)) runs outside the kernel.
+    iteration (at the stream dtype; accumulation is fp32); squash (Eq.3,
+    O(B·H·C)) runs outside the kernel.
     """
-    u_hat = u_hat.astype(jnp.float32)
+    u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
     B, L, H, C = u_hat.shape
     if l_tile is None:
-        # ~8MB VMEM budget for the û block.
-        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+        l_tile = _auto_l_tile(B, L, H, C, stream_dtype)
     b = jnp.zeros((L, H), jnp.float32)
     v = jnp.zeros((B, H, C), jnp.float32)
     for _ in range(iterations):
@@ -85,6 +230,30 @@ def dynamic_routing_fused(u_hat: jax.Array, *, iterations: int = 3,
                                        interpret=interpret)
         v = ref.squash(s, use_approx)
     return v
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
+                                             "l_tile", "stream_dtype",
+                                             "interpret"))
+def dynamic_routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
+                                    use_approx: bool = False,
+                                    l_tile: int | None = None,
+                                    stream_dtype: str = "fp32",
+                                    interpret: bool = True) -> jax.Array:
+    """Whole-procedure megakernel (DESIGN.md §Procedure-fused).
+
+    u_hat: (B, L, H, C) -> v: (B, H, C).  One pallas_call for all
+    iterations: b/v/s never cross the off-chip boundary, squash runs
+    in-kernel, û streams lane-packed (B, L, H·C) at ``stream_dtype``
+    ("fp32" | "bf16"; accumulation is always fp32).
+    """
+    u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
+    B, L, H, C = u_hat.shape
+    if l_tile is None:
+        l_tile = procedure_l_tile(B, L, H, C, stream_dtype)
+    return routing_procedure_fused(u_hat, iterations=iterations,
+                                   l_tile=l_tile, use_approx=use_approx,
+                                   interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +266,9 @@ def _softmax_h(b: jax.Array, h_axis: Optional[str],
 
     O(L·H) — negligible next to the O(B·L·H·C) Pallas stages, so it runs
     on the host between them, through the same psum-aware implementation
-    as the jnp backend (exact parity by construction)."""
+    as the jnp backend (exact parity by construction).  When neither B nor
+    H is sharded this launch disappears entirely: the fold kernel emits the
+    next iteration's c from the same û pass (routing_stage_update_fold)."""
     cfg = routing_lib.RoutingConfig(
         use_approx=use_approx,
         axes=(("H", h_axis),) if h_axis is not None else None)
@@ -113,6 +284,7 @@ def dynamic_routing_fused_sharded(u_hat: jax.Array, *,
                                   iterations: int = 3,
                                   use_approx: bool = False,
                                   l_tile: int | None = None,
+                                  stream_dtype: str = "fp32",
                                   interpret: bool = True) -> jax.Array:
     """Stage-split fused routing with cross-shard aggregation (Table 2).
 
@@ -127,23 +299,40 @@ def dynamic_routing_fused_sharded(u_hat: jax.Array, *,
 
     Per iteration û crosses HBM→VMEM twice (once per stage) instead of the
     unsharded kernel's once — the distribution cost the paper pays as
-    crossbar traffic M.  Returns v (B_local, H_local, C).
+    crossbar traffic M.  The stream-dtype cast is hoisted out of the
+    iteration loop (one cast feeds every stage of every iteration) and,
+    when neither B nor H is sharded, STAGE 2 folds the next iteration's
+    softmax into its û pass.  Returns v (B_local, H_local, C).
     """
-    u_hat = u_hat.astype(jnp.float32)
+    # hoisted û re-cast: one stream-dtype cast outside the loop instead of
+    # a fresh astype per stage per iteration
+    u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
     B, L, H, C = u_hat.shape
     if l_tile is None:
-        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+        l_tile = _auto_l_tile(B, L, H, C, stream_dtype)
+    b_axis, h_axis, l_axis = axes.get("B"), axes.get("H"), axes.get("L")
+    # the fold needs the complete db (no pending B psum) and a shard-local
+    # softmax denominator (no H psum) inside the kernel
+    fold = b_axis is None and h_axis is None
     b = jnp.zeros((L, H), jnp.float32)
     v = jnp.zeros((B, H, C), jnp.float32)
-    for _ in range(iterations):
-        c = _softmax_h(b, axes.get("H"), use_approx)               # Eq.5
+    c = None
+    for i in range(iterations):
+        if c is None:
+            c = _softmax_h(b, h_axis, use_approx)              # Eq.5
         s = routing_stage_votes(u_hat, c, l_tile=l_tile,
-                                interpret=interpret)               # Eq.2
-        s = _psum_if(s, axes.get("L"))
-        v, db = routing_stage_update(u_hat, s, l_tile=l_tile,
-                                     use_approx=use_approx,
-                                     interpret=interpret)          # Eq.3+4
-        b = b + _psum_if(db, axes.get("B"))
+                                interpret=interpret)           # Eq.2
+        s = _psum_if(s, l_axis)
+        if fold:
+            v, b, c = routing_stage_update_fold(
+                u_hat, s, b, l_tile=l_tile, use_approx=use_approx,
+                interpret=interpret)                           # Eq.3+4+5
+        else:
+            v, db = routing_stage_update(u_hat, s, l_tile=l_tile,
+                                         use_approx=use_approx,
+                                         interpret=interpret)  # Eq.3+4
+            b = b + _psum_if(db, b_axis)
+            c = None                                # host softmax next iter
     return v
 
 
@@ -172,7 +361,7 @@ def em_routing_fused(votes: jax.Array, a_in: jax.Array, *,
     votes = votes.astype(jnp.float32)
     B, L, H, C = votes.shape
     if l_tile is None:
-        l_tile = _pick_l_tile(L, 8 * 2 ** 20, B * H * C * 4)
+        l_tile = _auto_l_tile(B, L, H, C, "fp32")
     l_axis = axes.get("L")
     r = jnp.full((B, L, H), 1.0 / H, jnp.float32)
     mu = jnp.zeros((B, H, C), jnp.float32)

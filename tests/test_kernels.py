@@ -85,6 +85,177 @@ def test_property_routing_kernel(b, lt, nl, h, c):
 
 
 # ---------------------------------------------------------------------------
+# whole-procedure routing megakernel (DESIGN.md §Procedure-fused)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("iters", [1, 3, 9])
+@pytest.mark.parametrize("use_approx", [False, True])
+@pytest.mark.parametrize("stream_dtype", ["fp32", "bf16"])
+def test_routing_procedure_fused_vs_jnp(key, iters, use_approx,
+                                        stream_dtype):
+    """Parity of the one-pallas_call whole-procedure kernel vs the jnp
+    oracle across iterations x approx x stream dtype (acceptance: <=1e-5
+    for fp32)."""
+    u_hat = jax.random.normal(key, (2, 64, 6, 8))
+    v_k = rt_ops.dynamic_routing_procedure_fused(
+        u_hat, iterations=iters, use_approx=use_approx,
+        stream_dtype=stream_dtype)
+    if stream_dtype == "fp32":
+        want = rt_ref.dynamic_routing_ref(u_hat, iters, use_approx)
+        tol = 5e-5 if use_approx else 1e-5  # approx: fused-op reordering
+        np.testing.assert_allclose(v_k, want, rtol=tol, atol=tol)
+    else:
+        # tight vs the oracle on the bf16-rounded û: all in-kernel math is
+        # fp32, so only the streamed operand's rounding differs
+        pre = u_hat.astype(jnp.bfloat16).astype(jnp.float32)
+        np.testing.assert_allclose(
+            v_k, rt_ref.dynamic_routing_ref(pre, iters, use_approx),
+            rtol=1e-4, atol=5e-5)
+        # documented looser bf16 tolerance vs the full-precision oracle:
+        # 8 mantissa bits -> ~0.4% per û element, and the routing loop
+        # *sharpens* agreement so the rounding compounds with iterations
+        # (measured: 3e-3 at 3 iters, 2.3e-2 at 9)
+        np.testing.assert_allclose(
+            v_k, rt_ref.dynamic_routing_ref(u_hat, iters, use_approx),
+            rtol=5e-2, atol=5e-2)
+
+
+def test_routing_procedure_matches_iteration_fused(key):
+    """Megakernel == the per-iteration kernel loop (same lazy schedule,
+    same tile order) to float tolerance."""
+    u_hat = jax.random.normal(key, (4, 128, 10, 16))
+    v_p = rt_ops.dynamic_routing_procedure_fused(u_hat, iterations=3)
+    v_i = rt_ops.dynamic_routing_fused(u_hat, iterations=3)
+    np.testing.assert_allclose(v_p, v_i, rtol=1e-6, atol=1e-6)
+
+
+def test_routing_procedure_non_divisible_l_fallback(key):
+    """L=136 does not divide by the preferred 128-tile: the auto picker
+    must fall back to a real divisor (68) and stay correct; an explicit
+    non-divisor l_tile fails loudly."""
+    u_hat = jax.random.normal(key, (2, 136, 6, 8))
+    assert rt_ops.pick_l_tile(136, 8 * 2 ** 20, 2 * 6 * 8 * 4) == 68
+    v_k = rt_ops.dynamic_routing_procedure_fused(u_hat, iterations=3)
+    want = rt_ref.dynamic_routing_ref(u_hat, 3)
+    np.testing.assert_allclose(v_k, want, rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="not divisible"):
+        rt_ops.dynamic_routing_procedure_fused(u_hat, iterations=3,
+                                               l_tile=50)
+
+
+def test_pick_l_tile_matches_bruteforce():
+    """The O(sqrt L) divisor enumeration == the old 1..L scan."""
+    def brute(L, budget, row, preferred=128):
+        cap = max(1, budget // max(row, 1))
+        best = 1
+        for t in range(1, L + 1):
+            if L % t == 0 and t <= min(preferred, cap):
+                best = t
+        return best
+
+    for L in (1, 2, 17, 64, 96, 136, 576, 1152, 2304):
+        for budget, row in ((8 * 2 ** 20, 2 * 6 * 8 * 4),
+                            (4096, 512), (64, 512)):
+            assert rt_ops.pick_l_tile(L, budget, row) == brute(L, budget,
+                                                               row)
+
+
+def test_resolve_fusion_levels():
+    """fusion='auto' picks the megakernel iff shard-local + VMEM fit."""
+    small = (2, 64, 6, 8)
+    assert rt_ops.resolve_fusion("auto", small) == "procedure"
+    assert rt_ops.resolve_fusion("iteration", small) == "iteration"
+    assert rt_ops.resolve_fusion("auto", small, sharded=True) == \
+        "stage_split"
+    # (B,H,C) blocks alone blow the budget -> per-iteration fallback
+    big = (512, 1024, 32, 128)
+    assert rt_ops.procedure_vmem_bytes(*big[:4], l_tile=1) \
+        > rt_ops.PROCEDURE_VMEM_BUDGET
+    assert rt_ops.resolve_fusion("auto", big) == "iteration"
+    with pytest.raises(ValueError, match="shard-local"):
+        rt_ops.resolve_fusion("procedure", small, sharded=True)
+    with pytest.raises(ValueError, match="unknown fusion"):
+        rt_ops.resolve_fusion("mega", small)
+
+
+def test_resolve_fusion_capbound_shrinks_tile():
+    """A cap-bound (large B·H·C row) shape must shrink the megakernel's
+    l_tile to fit the total budget, not fall back to the per-iteration
+    kernel (regression: the 8MB-per-buffer pick structurally overflowed
+    2x into the 14MB budget whenever the cap bound bit)."""
+    capbound = (128, 128, 16, 16)          # row = 128*16*16*4 = 128 KiB
+    lt = rt_ops.procedure_l_tile(*capbound)
+    assert lt < rt_ops.auto_l_tile(*capbound, "fp32")
+    assert rt_ops.procedure_vmem_bytes(*capbound, l_tile=lt) \
+        <= rt_ops.PROCEDURE_VMEM_BUDGET
+    assert rt_ops.resolve_fusion("auto", capbound) == "procedure"
+
+
+def test_fused_paths_stream_bf16_without_promotion(key):
+    """The modeled DMA halving is real only if the pallas_call consumes the
+    bf16 operand itself: no full-size fp32 copy of û may appear in the
+    jaxpr of either fused path (regression: the iteration wrapper used to
+    astype(f32) right before the call)."""
+    from repro.kernels.routing.kernel import routing_iteration_fused
+    u = jax.random.normal(key, (2, 64, 6, 8)).astype(jnp.bfloat16)
+    b0, v0 = jnp.zeros((64, 6)), jnp.zeros((2, 6, 8))
+    it_jaxpr = str(jax.make_jaxpr(functools.partial(
+        routing_iteration_fused, l_tile=32))(u, b0, v0))
+    assert "f32[2,64,6,8]" not in it_jaxpr
+    # L=256 > l_tile=128 so an in-kernel fp32 *block* (legitimate) can't
+    # alias the full-array shape the assertion hunts for
+    u_l = jax.random.normal(key, (2, 256, 6, 8)).astype(jnp.bfloat16)
+    proc_jaxpr = str(jax.make_jaxpr(functools.partial(
+        rt_ops.dynamic_routing_procedure_fused, iterations=2,
+        stream_dtype="bf16"))(u_l))
+    assert "f32[2,256,6,8]" not in proc_jaxpr
+    assert "f32[2,256,48]" not in proc_jaxpr    # lane-packed full copy
+    # and the bf16 iteration path matches the oracle on the rounded û
+    v = rt_ops.dynamic_routing_fused(u, iterations=3, stream_dtype="bf16")
+    pre = u.astype(jnp.float32)
+    np.testing.assert_allclose(v, rt_ref.dynamic_routing_ref(pre, 3),
+                               rtol=1e-4, atol=5e-5)
+
+
+def test_dma_model_three_forms():
+    """The DMA model's acceptance invariants: procedure-fusion eliminates
+    the per-iteration (L,H)/(B,H,C) round-trips, bf16 halves û stream
+    bytes, stage-split pays the distribution double-stream."""
+    B, L, H, C, iters = 4, 128, 10, 16, 3
+    it = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="iteration")
+    pr = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure")
+    ss = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="stage_split")
+    bf = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure",
+                                   stream_dtype="bf16")
+    assert pr["roundtrip_bytes"] == B * H * C * 4
+    assert it["roundtrip_bytes"] == iters * (2 * L * H + 4 * B * H * C) * 4
+    assert pr["total_bytes"] < it["total_bytes"] < ss["total_bytes"]
+    assert bf["u_hat_stream_bytes"] * 2 == pr["u_hat_stream_bytes"]
+    assert bf["roundtrip_bytes"] == pr["roundtrip_bytes"]  # fp32 roundtrip
+    assert ss["u_hat_stream_bytes"] == 2 * it["u_hat_stream_bytes"]
+    with pytest.raises(ValueError, match="unknown form"):
+        rt_ops.dma_bytes_per_call(B, L, H, C, form="fused")
+
+
+def test_stage_update_fold_matches_split(key):
+    """routing_stage_update_fold == routing_stage_update + host softmax
+    (the folded Eq.5 path the sharded form takes when B/H are unsharded)."""
+    from repro.kernels.routing.kernel import (routing_stage_update,
+                                              routing_stage_update_fold)
+    B, L, H, C = 2, 64, 5, 8
+    u = jax.random.normal(key, (B, L, H, C))
+    s = jax.random.normal(jax.random.fold_in(key, 1), (B, H, C))
+    b = jax.random.normal(jax.random.fold_in(key, 2), (L, H))
+    v_f, b_f, c_f = routing_stage_update_fold(u, s, b, l_tile=32)
+    v_u, db = routing_stage_update(u, s, l_tile=32)
+    np.testing.assert_allclose(v_f, v_u, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(b_f, b + db, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(c_f, jax.nn.softmax(b + db, axis=-1),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # fastmath kernel
 # ---------------------------------------------------------------------------
 

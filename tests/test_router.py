@@ -329,6 +329,105 @@ def test_auto_plan_may_pick_sharded_fused():
                                rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# procedure fusion + stream dtype (DESIGN.md §Procedure-fused)
+# ---------------------------------------------------------------------------
+
+def test_fusion_procedure_matches_jnp(key):
+    """fusion='procedure' routes through the whole-procedure megakernel and
+    matches the jnp backend <=1e-5 (acceptance criterion)."""
+    u = jax.random.normal(key, (2, 64, 6, 8))
+    want = build_router(RouterSpec(iterations=3))(u)
+    router = build_router(RouterSpec(backend="pallas", iterations=3,
+                                     fusion="procedure"))
+    np.testing.assert_allclose(np.asarray(router(u)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    resolved = router.resolve(u)
+    assert resolved.fusion == "procedure"
+    assert resolved.stream_dtype == "fp32"
+    assert tuple(resolved) == ()      # still the historical axes tuple
+
+
+def test_fusion_auto_picks_procedure_when_unsharded(key):
+    """The default fusion='auto' resolves to the megakernel for a
+    shard-local plan whose VMEM working set fits."""
+    u = jax.random.normal(key, (2, 64, 6, 8))
+    router = build_router(RouterSpec(backend="pallas", iterations=3))
+    assert router.resolve(u).fusion == "procedure"
+    want = build_router(RouterSpec(iterations=3))(u)
+    np.testing.assert_allclose(np.asarray(router(u)), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_bf16_stream_through_router(key):
+    """stream_dtype='bf16' halves the û DMA (modeled) and stays within the
+    documented bf16 tolerance of the fp32 jnp backend."""
+    u = jax.random.normal(key, (2, 64, 6, 8))
+    want = build_router(RouterSpec(iterations=3))(u)
+    router = build_router(RouterSpec(backend="pallas", iterations=3,
+                                     fusion="procedure",
+                                     stream_dtype="bf16"))
+    resolved = router.resolve(u)
+    assert resolved.fusion == "procedure"
+    assert resolved.stream_dtype == "bf16"
+    np.testing.assert_allclose(np.asarray(router(u)), np.asarray(want),
+                               rtol=5e-2, atol=1e-2)
+
+
+def test_resolve_reports_stage_split_and_jnp_none(u_hat):
+    """resolve() reports the concrete execution form: stage_split under a
+    sharded plan, None for the jnp backend — and keeps behaving like the
+    historical (dim, axis) tuple."""
+    mesh = compat.make_mesh((1,), ("x",))
+    sharded = build_router(RouterSpec(backend="pallas", iterations=3),
+                           ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+    resolved = sharded.resolve(u_hat)
+    assert resolved.fusion == "stage_split"
+    assert resolved.stream_dtype == "fp32"
+    assert tuple(resolved) == (("L", "x"),)
+    auto = build_router(RouterSpec(backend="pallas", iterations=3), "auto")
+    r_auto = auto.resolve(u_hat)
+    assert r_auto.fusion in ("procedure", "iteration", "stage_split")
+    jnp_r = build_router(RouterSpec(iterations=3), "auto").resolve(u_hat)
+    assert jnp_r.fusion is None and jnp_r.stream_dtype is None
+
+
+def test_resolve_without_args_static_plan(u_hat):
+    """No-arg resolve() on a static plan keeps working (regression: it
+    raised IndexError reading shapes[0]); fusion resolves wherever the
+    votes shape isn't needed and reports None where it is."""
+    mesh = compat.make_mesh((1,), ("x",))
+    sharded = build_router(RouterSpec(backend="pallas", iterations=3),
+                           ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+    resolved = sharded.resolve()
+    assert tuple(resolved) == (("L", "x"),)
+    assert resolved.fusion == "stage_split"
+    forced = build_router(RouterSpec(backend="pallas", iterations=3,
+                                     fusion="procedure"))
+    assert forced.resolve().fusion == "procedure"
+    auto = build_router(RouterSpec(backend="pallas", iterations=3))
+    assert auto.resolve().fusion is None    # auto fit needs the votes shape
+    assert auto.resolve(u_hat).fusion == "procedure"
+
+
+def test_fusion_and_stream_dtype_error_surface():
+    mesh = compat.make_mesh((1,), ("x",))
+    with pytest.raises(ValueError, match="shard-local"):
+        build_router(RouterSpec(backend="pallas", fusion="procedure"),
+                     ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+    with pytest.raises(ValueError, match="unknown fusion"):
+        build_router(RouterSpec(backend="pallas", fusion="mega"))
+    with pytest.raises(ValueError, match="unknown stream_dtype"):
+        build_router(RouterSpec(backend="pallas", stream_dtype="fp16"))
+    with pytest.raises(ValueError, match="pallas-backend knob"):
+        build_router(RouterSpec(fusion="procedure"))          # jnp backend
+    with pytest.raises(ValueError, match="pallas-backend knob"):
+        build_router(RouterSpec(algorithm="em", backend="pallas",
+                                fusion="iteration"))          # em: no knob
+    with pytest.raises(ValueError, match="requires the 'dynamic'"):
+        build_router(RouterSpec(stream_dtype="bf16"))         # jnp backend
+
+
 def test_legacy_fused_sharded_delegates(u_hat):
     """RoutingConfig(fused=True) + sharded dims now runs the sharded-fused
     path through the legacy shims (previously a ValueError)."""
