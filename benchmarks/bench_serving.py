@@ -1,14 +1,19 @@
-"""Served end-to-end CapsNet: offered-load sweep, pipelined vs unpipelined.
+"""Served end-to-end CapsNet: offered-load sweep, pipelined vs unpipelined
+vs async-admission vs EM arms.
 
 Extends the Fig.8/§6.3 pipeline claim to the *served system* (ROADMAP north
 star; DESIGN.md §Serving): synthetic requests arrive in ragged bursts at a
 swept offered load, the continuous-batching server pads them into fixed
 microbatch lanes, and each wave runs through the §4 host‖PIM pipeline
-(pipelined arm) or strictly sequentially (unpipelined arm).  Reported per
-(arm, load) cell: median/p90 request latency (queue + compute) and
-throughput.  A correctness gate asserts the two arms' class probabilities
-agree to <= 1e-5 on an identical wave — the acceptance bar for the
-pipeline transform under serving traffic.
+(pipelined arm), strictly sequentially (unpipelined arm), or through the
+threaded ``serve_forever`` driver with a concurrent submitter (async arm —
+same pipelined wave executable, admission decoupled from wave formation).
+The EM arms run the same sweep with ``RouterSpec(algorithm="em")`` — the
+multi-input (votes, a_in) pipeline stage hand-off.  Reported per
+(arm, load) cell: median/p90 request latency (queue + compute), throughput,
+and shed count.  Correctness gates assert pipelined == unpipelined class
+scores to <= 1e-5 on an identical wave, for dynamic AND for EM — the
+acceptance bar for the pipeline transform under serving traffic.
 
 On one CPU device the pipelined arm's overlap win is bounded by scheduler
 slack (same caveat as bench_pipeline); the latency/throughput *shape* across
@@ -16,17 +21,23 @@ loads — queueing delay rising toward saturation — is the measured claim.
 """
 from __future__ import annotations
 
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
+from repro.core.router import RouterSpec
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
-from repro.runtime.caps_serve import CapsServer, ServeConfig, make_wave_fn
+from repro.runtime.caps_serve import (CapsServer, ServeConfig, ServeMetrics,
+                                      make_wave_fn)
 
-ARMS = ("pipelined", "unpipelined")
+ARMS = ("pipelined", "unpipelined", "async", "em_pipelined",
+        "em_unpipelined")
 
 
 def _setup():
@@ -42,15 +53,24 @@ def _setup():
 
 
 def _serve_cfg(arm: str, microbatch: int, n_micro: int) -> ServeConfig:
+    pipelined = not arm.endswith("unpipelined")
     return ServeConfig(microbatch=microbatch, n_micro=n_micro,
-                       pipeline="software" if arm == "pipelined" else None)
+                       pipeline="software" if pipelined else None)
 
 
-def make_server(params, caps_cfg, cfg: ServeConfig) -> CapsServer:
+def _spec(arm: str, caps_cfg):
+    if arm.startswith("em"):
+        return RouterSpec(algorithm="em",
+                          iterations=caps_cfg.routing_iters)
+    return None
+
+
+def make_server(params, caps_cfg, arm: str, cfg: ServeConfig) -> CapsServer:
     """One server (one compiled wave executable) per arm; cells reset its
     metrics instead of rebuilding — the sweep then measures steady-state
     serving, never the one-off compile."""
-    server = CapsServer(params, caps_cfg, cfg=cfg)
+    server = CapsServer(params, caps_cfg, spec=_spec(arm, caps_cfg),
+                        cfg=cfg)
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
     server.submit(ds.batch(999, 1)["images"])    # warm the executable
@@ -58,11 +78,20 @@ def make_server(params, caps_cfg, cfg: ServeConfig) -> CapsServer:
     return server
 
 
+def _cell_row(load: float, s: dict) -> dict:
+    return {"offered_load": load, "requests": s["completed"],
+            "waves": s["waves"], "padded_lanes": s["padded_lanes"],
+            "shed": s["shed"],
+            "latency": {"median_s": s["p50_latency_s"],
+                        "p90_s": s["p90_latency_s"]},
+            "throughput_rps": s["throughput_rps"]}
+
+
 def run_cell(server: CapsServer, caps_cfg, total: int, load: float) -> dict:
     """One (arm, offered-load) cell: ragged arrivals at ``load`` x wave
     capacity per tick, one wave per tick, then drain."""
     cfg = server.cfg
-    server.metrics = type(server.metrics)()
+    server.metrics = ServeMetrics()
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
     rng = np.random.default_rng(0)
@@ -77,16 +106,51 @@ def run_cell(server: CapsServer, caps_cfg, total: int, load: float) -> dict:
                 left -= count
         server.step()
         tick += 1
-    s = server.metrics.summary()
-    return {"offered_load": load, "requests": s["completed"],
-            "waves": s["waves"], "padded_lanes": s["padded_lanes"],
-            "latency": {"median_s": s["p50_latency_s"],
-                        "p90_s": s["p90_latency_s"]},
-            "throughput_rps": s["throughput_rps"]}
+    return _cell_row(load, server.metrics.summary())
 
 
-def arm_equivalence(params, caps_cfg, microbatch: int, n_micro: int):
-    """Pipelined vs unpipelined class probabilities on one identical wave."""
+def run_cell_async(server: CapsServer, caps_cfg, total: int,
+                   load: float) -> dict:
+    """One async cell: ``serve_forever`` forms waves on a background
+    thread while this thread submits the same ragged schedule — admission
+    cadence and wave formation are decoupled (DESIGN.md §Serving).
+
+    Arrivals are *paced*: in the sync cell one tick == one wave by
+    construction, so here a tick sleeps for one measured wave-service
+    time — ``offered_load`` then means the same thing in both drivers
+    (arrivals per wave time as a fraction of wave capacity) and the
+    load-dependent queueing shape survives the async driver instead of
+    the whole schedule flooding the queue at t=0."""
+    cfg = server.cfg
+    ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
+                              caps_cfg.num_h_caps)
+    server.submit(ds.batch(998, cfg.wave_lanes)["images"])   # time one wave
+    t0 = time.perf_counter()
+    server.drain()
+    tick_s = time.perf_counter() - t0
+    server.metrics = ServeMetrics()
+    stop = threading.Event()
+    driver = threading.Thread(
+        target=server.serve_forever, args=(stop,), kwargs={"poll_s": 0.001})
+    driver.start()
+    rng = np.random.default_rng(0)
+    left = total
+    tick = 0
+    while left > 0:
+        count = min(left, int(rng.poisson(max(1.0, load * cfg.wave_lanes))))
+        if count:
+            server.submit(ds.batch(tick, count)["images"])
+            left -= count
+        tick += 1
+        time.sleep(tick_s)
+    stop.set()
+    driver.join()
+    assert server.pending() == 0
+    return _cell_row(load, server.metrics.summary())
+
+
+def arm_equivalence(params, caps_cfg, spec, microbatch: int, n_micro: int):
+    """Pipelined vs unpipelined class scores on one identical wave."""
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
     lanes = microbatch * n_micro
@@ -94,9 +158,9 @@ def arm_equivalence(params, caps_cfg, microbatch: int, n_micro: int):
         (n_micro, microbatch, caps_cfg.image_hw, caps_cfg.image_hw,
          caps_cfg.image_channels))
     micro = {"images": images, "mask": jnp.ones((n_micro, microbatch))}
-    probs = {arm: make_wave_fn(params, caps_cfg, None,
+    probs = {arm: make_wave_fn(params, caps_cfg, spec,
                                _serve_cfg(arm, microbatch, n_micro))(micro)
-             for arm in ARMS}
+             for arm in ("pipelined", "unpipelined")}
     diff = float(jnp.max(jnp.abs(probs["pipelined"]
                                  - probs["unpipelined"])))
     return diff, diff <= 1e-5
@@ -104,24 +168,31 @@ def arm_equivalence(params, caps_cfg, microbatch: int, n_micro: int):
 
 def main():
     caps_cfg, params, microbatch, n_micro, total, loads = _setup()
-    diff, ok = arm_equivalence(params, caps_cfg, microbatch, n_micro)
+    diff, ok = arm_equivalence(params, caps_cfg, None, microbatch, n_micro)
     assert ok, f"pipelined vs unpipelined diverged: max|delta|={diff}"
+    em_diff, em_ok = arm_equivalence(
+        params, caps_cfg, _spec("em", caps_cfg), microbatch, n_micro)
+    assert em_ok, f"EM pipelined vs unpipelined diverged: " \
+                  f"max|delta|={em_diff}"
 
     rows = {arm: [] for arm in ARMS}
-    print("arm,offered_load,requests,waves,padded_lanes,"
+    print("arm,offered_load,requests,waves,padded_lanes,shed,"
           "latency_p50_s,latency_p90_s,throughput_rps")
     for arm in ARMS:
-        server = make_server(params, caps_cfg,
+        server = make_server(params, caps_cfg, arm,
                              _serve_cfg(arm, microbatch, n_micro))
+        cell = run_cell_async if arm == "async" else run_cell
         for load in loads:
-            r = run_cell(server, caps_cfg, total, load)
+            r = cell(server, caps_cfg, total, load)
             rows[arm].append(r)
             print(f"{arm},{load},{r['requests']},{r['waves']},"
-                  f"{r['padded_lanes']},{r['latency']['median_s']:.4f},"
+                  f"{r['padded_lanes']},{r['shed']},"
+                  f"{r['latency']['median_s']:.4f},"
                   f"{r['latency']['p90_s']:.4f},"
                   f"{r['throughput_rps']:.1f}")
-    print(f"# arm max|delta probs| = {diff:.2e} (gate: <= 1e-5); single-"
-          f"device overlap is scheduler-bound — see benchmarks/README.md")
+    print(f"# arm max|delta scores|: dynamic {diff:.2e}, em {em_diff:.2e} "
+          f"(gate: <= 1e-5); single-device overlap is scheduler-bound — "
+          f"see benchmarks/README.md")
     return {"paper_artifact": "Fig.8/§6.3 (served end-to-end)",
             "config": {"network": caps_cfg.name, "microbatch": microbatch,
                        "n_micro": n_micro, "requests_per_cell": total,
@@ -130,7 +201,9 @@ def main():
             "arms": rows,
             "offered_loads": list(loads),
             "outputs_identical": ok,
-            "max_abs_prob_delta": diff}
+            "max_abs_prob_delta": diff,
+            "em_outputs_identical": em_ok,
+            "em_max_abs_delta": em_diff}
 
 
 if __name__ == "__main__":

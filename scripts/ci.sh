@@ -67,25 +67,38 @@ EOF
   echo "== smoke: repro.launch.serve_caps --smoke (continuous batching) =="
   PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke
 
+  echo "== smoke: repro.launch.serve_caps --smoke --async (threaded driver) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --async
+
   echo "== smoke: benchmarks.run --smoke --only serving (JSON artifact) =="
   PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only serving
   python - <<'EOF'
 import json
-d = json.load(open("BENCH_serving.json"))
+
+# STRICT loader: NaN/Infinity are a regression (ServeMetrics.summary once
+# emitted float("nan") percentiles), not valid JSON — reject them.
+def _reject(name):
+    raise AssertionError(f"non-finite constant {name} in BENCH_serving.json")
+
+d = json.loads(open("BENCH_serving.json").read(), parse_constant=_reject)
 for key in ("bench", "smoke", "config", "arms", "offered_loads",
-            "outputs_identical", "max_abs_prob_delta"):
+            "outputs_identical", "max_abs_prob_delta",
+            "em_outputs_identical", "em_max_abs_delta"):
     assert key in d, f"BENCH_serving.json missing {key!r}"
 assert d["bench"] == "serving"
 assert d["outputs_identical"], d["max_abs_prob_delta"]
+assert d["em_outputs_identical"], d["em_max_abs_delta"]
 assert len(d["offered_loads"]) >= 2, d["offered_loads"]
-for arm in ("pipelined", "unpipelined"):
+for arm in ("pipelined", "unpipelined", "async", "em_pipelined",
+            "em_unpipelined"):
     cells = d["arms"][arm]
     assert len(cells) >= 2, (arm, cells)
     for c in cells:
         assert c["latency"]["median_s"] > 0, (arm, c)
         assert c["latency"]["p90_s"] > 0, (arm, c)
         assert c["throughput_rps"] > 0, (arm, c)
-print("BENCH_serving.json OK: both arms,",
+        assert c["shed"] == 0, (arm, c)
+print("BENCH_serving.json OK (strict JSON):", len(d["arms"]), "arms x",
       len(d["offered_loads"]), "offered-load points")
 EOF
 fi

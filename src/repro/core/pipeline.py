@@ -20,12 +20,17 @@ Two entry points:
 Both accept *pytrees* of stacked microbatches (every leaf shaped
 ``(n_micro, ...)``) so stages can consume auxiliary per-lane operands — the
 serving path (DESIGN.md §Serving) threads a padding mask next to the images
-this way.  ``two_stage_pipeline`` additionally composes with a routing stage
-that is itself sharded over a *second* mesh axis (the paper's §5.1
-inter-vault distribution running inside the §4 pipeline's PIM stage): pass
-``in_spec``/``out_spec`` partitioning the non-pipe axes and set
-``stage_b_collectives=True`` so stage B's cross-vault ``lax.psum``s execute
-uniformly on every pipe rank instead of under a per-rank ``lax.cond``.
+this way.  The stage hand-off is equally a pytree: a multi-input stage B
+(EM routing's ``(votes, a_in)`` pair) receives exactly the tuple stage A
+returned, every leaf crossing the carry/ppermute together, and stage B may
+return a tuple too (EM's ``(pose, a_out)``) — the stacked outputs mirror
+that structure leaf-by-leaf.  ``two_stage_pipeline`` additionally composes
+with a routing stage that is itself sharded over one or more *further* mesh
+axes (the paper's §5.1 inter-vault distribution running inside the §4
+pipeline's PIM stage): pass ``in_spec``/``out_spec`` partitioning the
+non-pipe axes and set ``stage_b_collectives=True`` so stage B's cross-vault
+``lax.psum``s execute uniformly on every pipe rank instead of under a
+per-rank ``lax.cond``.
 """
 from __future__ import annotations
 
@@ -44,6 +49,11 @@ def _n_micro(micro_inputs) -> int:
     leaves = jax.tree.leaves(micro_inputs)
     if not leaves:
         raise ValueError("micro_inputs pytree has no leaves")
+    counts = {l.shape[0] for l in leaves}
+    if len(counts) != 1:
+        raise ValueError("micro_inputs leaves disagree on n_micro "
+                         f"(leading dims {sorted(counts)}); every leaf "
+                         "must stack the same number of microbatches")
     return leaves[0].shape[0]
 
 
@@ -60,9 +70,12 @@ def software_pipeline_scan(stage_a: Callable, stage_b: Callable,
     dependence structure; on two pipeline shards use ``two_stage_pipeline``).
 
     micro_inputs: pytree of (n_micro, ...) stacked microbatches (a bare
-    array is the single-leaf case).  stage_b may itself be a shard_map
+    array is the single-leaf case).  stage_a's output is handed to stage_b
+    as-is — return a tuple for a multi-input stage B (EM's (votes, a_in))
+    and it crosses the carry whole.  stage_b may itself be a shard_map
     program (a sharded routing stage) — collectives trace fine under the
-    scan.  Returns stacked stage_b outputs, each leaf (n_micro, ...).
+    scan — and may return a pytree (EM's (pose, a_out)).  Returns stacked
+    stage_b outputs, each leaf (n_micro, ...).
     """
     a0 = stage_a(_at(micro_inputs, 0))
     rest = jax.tree.map(lambda x: x[1:], micro_inputs)
@@ -88,6 +101,11 @@ def two_stage_pipeline(stage_a: Callable, stage_b: Callable,
 
     stage_a: microbatch -> hidden        (runs on pipe rank 0, the "host")
     stage_b: hidden -> output            (runs on pipe rank 1, the "PIM")
+
+    ``hidden`` and ``output`` are pytrees: a multi-input stage B (EM's
+    (votes, a_in)) takes the tuple stage A returned — every leaf ppermutes
+    across the pipe hand-off together — and multi-output stage Bs (EM's
+    (pose, a_out)) stack leaf-by-leaf.
 
     Returns f(micro_inputs) -> stacked outputs; micro_inputs is a pytree
     whose leaves are (n_micro, ...) stacked microbatches.  Hidden states

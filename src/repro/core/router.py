@@ -264,11 +264,15 @@ class ExecutionPlan:
         router then consumes stacked microbatches — a pytree whose leaves
         are (n_micro, ...) (e.g. images + a padding mask, DESIGN.md
         §Serving).  ``stage_a`` is the producer stage (e.g. conv + votes);
-        identity when omitted.  Pipeline plans now COMPOSE with axes/auto:
-        the sharded/auto distribution applies to the routing stage
-        *inside* the pipeline (the paper's §5.1 vault distribution running
-        in the §4 PIM stage) over a non-pipe mesh axis, resolved against
-        the stage_a output (votes) shape.
+        identity when omitted — for multi-input algorithms (EM) it must
+        return the algorithm's input tuple in argument order (the
+        (votes, a_in) hand-off), and the pipeline hands the whole tuple
+        across stages.  Pipeline plans COMPOSE with axes/auto: the
+        sharded/auto distribution applies to the routing stage *inside*
+        the pipeline (the paper's §5.1 vault distribution running in the
+        §4 PIM stage) over one or several non-pipe mesh axes
+        (``axes=(("B","data"), ("L","model"))`` shards the stage over
+        both), resolved against the stage_a output (votes) shape.
     """
     mesh: Optional[jax.sharding.Mesh] = None
     axes: Tuple[Tuple[str, str], ...] = ()
@@ -285,6 +289,13 @@ class ExecutionPlan:
         if self.axes and self.auto:
             raise ValueError("ExecutionPlan: give explicit axes OR auto=True,"
                              " not both")
+        dims = [d for d, _ in self.axes]
+        if len(set(dims)) != len(dims):
+            raise ValueError(f"duplicate logical dims in axes {self.axes}")
+        names = [a for _, a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axes in axes {self.axes}; "
+                             "each sharded dim needs its own mesh axis")
         for d, a in self.axes:
             if self.mesh is None:
                 raise ValueError("ExecutionPlan with sharded axes needs a "
@@ -410,11 +421,13 @@ class Router:
         resolved ``fusion`` level and ``stream_dtype`` as attributes.
 
         With a pipeline plan the distribution lives inside the routing
-        stage, so resolution runs against the stage_a output (votes) shape
-        of one microbatch, not the stacked pipeline inputs.
+        stage, so resolution runs against the stage_a output (votes — for
+        multi-input algorithms the first hand-off leaf) shape of one
+        microbatch, not the stacked pipeline inputs.
         """
         if self.plan.pipeline is not None:
-            shapes = (self._hidden_struct(args[0]).shape,)
+            hidden = self._hidden_struct(args[0])
+            shapes = tuple(l.shape for l in jax.tree.leaves(hidden))
         else:
             shapes = tuple(jnp.shape(a) for a in args)
         axes = self._resolve_shapes(shapes)
@@ -473,68 +486,112 @@ class Router:
             lambda *args: algo.run(args, spec, ax),
             self._mesh(), tuple(algo.in_specs(ax)), algo.out_specs(ax))
 
+    def _stage_b(self, axes: Tuple[Tuple[str, str], ...]) -> Callable:
+        """Pipeline stage B: the algorithm body consuming the stage-A
+        hand-off — a bare votes array for 1-input algorithms, a tuple for
+        multi-input ones (EM's (votes, a_in) — DESIGN.md §Serving)."""
+        core = self._core_fn(axes)
+        if self.algorithm.num_inputs == 1:
+            return core
+        return lambda h: core(*h)
+
     def _pipelined_fn(self, micro) -> Callable:
         plan = self.plan
         stage_a = plan.stage_a or (lambda x: x)
         hidden = self._hidden_struct(micro)
-        axes = self._resolve_shapes((hidden.shape,))
+        shapes = tuple(l.shape for l in jax.tree.leaves(hidden))
+        axes = self._resolve_shapes(shapes)
         if plan.pipeline == "software":
             # the routing stage may itself be a shard_map program (§5.1
-            # distribution inside the stage) — it traces under the scan.
-            core = self._core_fn(axes)
+            # distribution inside the stage, over one or several vault
+            # axes) — it traces under the scan.
+            stage_b = self._stage_b(axes)
             return lambda m: pipeline_lib.software_pipeline_scan(
-                stage_a, core, m)
+                stage_a, stage_b, m)
         if not axes:
             return pipeline_lib.two_stage_pipeline(
-                stage_a, self._core_fn(()), self._mesh(),
+                stage_a, self._stage_b(()), self._mesh(),
                 plan.pipeline_axis, hidden)
         return self._two_stage_sharded_fn(stage_a, hidden, axes)
 
-    def _two_stage_sharded_fn(self, stage_a: Callable,
-                              hidden: jax.ShapeDtypeStruct,
+    def _two_stage_sharded_fn(self, stage_a: Callable, hidden,
                               axes: Tuple[Tuple[str, str], ...]) -> Callable:
         """§4 pipeline with the §5.1 vault distribution inside the PIM
-        stage (DESIGN.md §Serving): one shard_map spans the pipe axis AND
-        the routing axis; stage B is the per-shard algorithm body with its
-        Table-2 psums on the vault axis.
+        stage (DESIGN.md §Serving): ONE shard_map spans the pipe axis AND
+        every vault axis; stage B is the per-shard algorithm body with its
+        Table-2 psums per vault axis.  Generalizes along two directions:
+
+        * multi-dim plans — ``axes`` may hold several (dim, mesh_axis)
+          pairs (e.g. B over "data" x L over "model"); each sharded dim's
+          position in each stage-B input comes from the algorithm's own
+          ``in_specs``, so the slicing never hard-codes a layout;
+        * multi-input algorithms — ``hidden`` is the stage-A hand-off
+          pytree (a tuple in algorithm-argument order for EM's
+          (votes, a_in)); every leaf crosses the ppermute hand-off.
 
         B-sharded plans shard the pipeline *inputs* (each vault's host
-        group encodes its own lanes); L/H-sharded plans replicate the
-        encoder and have each host shard slice its vault's chunk of the
-        votes before the hand-off — the paper's host-computes-votes,
-        scatters-to-vaults traffic pattern.
+        group encodes its own lanes — logical B is the stacked inputs'
+        lane dim); other sharded dims replicate the encoder and have each
+        host shard slice its vault's chunk before the hand-off — the
+        paper's host-computes-votes, scatters-to-vaults traffic pattern.
         """
         plan, algo, spec = self.plan, self.algorithm, self.spec
         mesh = self._mesh()
-        (dim, vaxis), = axes
         ax = dict(axes)
-        n = mesh.shape[vaxis]
-        dim_index = {"B": 0, "L": 1, "H": 2}[dim]
-        if hidden.shape[dim_index] % n:
+        in_specs = tuple(algo.in_specs(ax))
+        structs = list(hidden) if algo.num_inputs > 1 else [hidden]
+        if len(structs) != len(in_specs):
             raise ValueError(
-                f"votes dim {dim}={hidden.shape[dim_index]} not divisible "
-                f"by |{vaxis}|={n}")
-        chunk = hidden.shape[dim_index] // n
-        shard_shape = tuple(chunk if i == dim_index else s
-                            for i, s in enumerate(hidden.shape))
-        per_shard_hidden = jax.ShapeDtypeStruct(shard_shape, hidden.dtype)
+                f"stage_a must hand off {algo.num_inputs} leaves in "
+                f"{algo.name!r}'s argument order; got {len(structs)}")
+        axis_dim = {a: d for d, a in axes}
+        b_axis = ax.get("B")
+
+        def shard_struct(struct, ispec):
+            shape = list(struct.shape)
+            for pos, name in enumerate(ispec):
+                if name is None:
+                    continue
+                n = mesh.shape[name]
+                if shape[pos] % n:
+                    raise ValueError(
+                        f"votes dim {axis_dim[name]}={shape[pos]} not "
+                        f"divisible by |{name}|={n}")
+                shape[pos] //= n
+            return jax.ShapeDtypeStruct(tuple(shape), struct.dtype)
+
+        per_shard = tuple(shard_struct(s, i)
+                          for s, i in zip(structs, in_specs))
+        a_out_shape = per_shard if algo.num_inputs > 1 else per_shard[0]
 
         def stage_a_shard(x):
             h = stage_a(x)
-            if dim == "B":
-                return h            # inputs were already the B-chunk
-            i = jax.lax.axis_index(vaxis)
-            return jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk,
-                                                dim_index)
+            leaves = list(h) if algo.num_inputs > 1 else [h]
+            out = []
+            for leaf, ispec in zip(leaves, in_specs):
+                for pos, name in enumerate(ispec):
+                    if name is None or name == b_axis:
+                        continue    # B arrived pre-sharded via the inputs
+                    chunk = leaf.shape[pos] // mesh.shape[name]
+                    i = jax.lax.axis_index(name)
+                    leaf = jax.lax.dynamic_slice_in_dim(
+                        leaf, i * chunk, chunk, pos)
+                out.append(leaf)
+            return tuple(out) if algo.num_inputs > 1 else out[0]
 
         def stage_b_shard(h):
-            return algo.run((h,), spec, ax)
+            args = tuple(h) if algo.num_inputs > 1 else (h,)
+            return algo.run(args, spec, ax)
 
-        in_spec = P(None, vaxis) if dim == "B" else P(None)
-        out_spec = P(None, *algo.out_specs(ax))
+        in_spec = P(None, b_axis) if b_axis is not None else P(None)
+        outs = algo.out_specs(ax)
+        if isinstance(outs, P):
+            out_spec = P(None, *outs)
+        else:
+            out_spec = tuple(P(None, *s) for s in outs)
         return pipeline_lib.two_stage_pipeline(
             stage_a_shard, stage_b_shard, mesh, plan.pipeline_axis,
-            per_shard_hidden, in_spec=in_spec, out_spec=out_spec,
+            a_out_shape, in_spec=in_spec, out_spec=out_spec,
             stage_b_collectives=True)
 
     def _executor(self, args) -> Callable:
@@ -611,14 +668,10 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             f"algorithm {algo.name!r} cannot shard dims {bad} "
             f"(shardable: {algo.sharded_dims})")
     if plan.pipeline is not None:
-        if algo.name != "dynamic":
-            raise ValueError("pipelined plans currently support the "
-                             "'dynamic' algorithm only (single input/output "
-                             "stage)")
-        if len(plan.axes) > 1:
-            raise ValueError("pipelined plans shard at most one routing "
-                             "dim inside the stage (multi-dim sharded "
-                             "pipeline stages are future work)")
+        # any registered algorithm pipelines: the stage hand-off is the
+        # algorithm's input tuple (multi-input hand-off, DESIGN.md
+        # §Serving), and the routing stage may shard over any number of
+        # non-pipe mesh axes (multi-dim sharded pipeline stages).
         if any(a == plan.pipeline_axis for _, a in plan.axes):
             raise ValueError(
                 f"mesh axis {plan.pipeline_axis!r} is the pipeline's stage "

@@ -4,18 +4,27 @@ Drives the paper's workload (Table-1 CapsNet benchmarks) through
 ``repro.runtime.caps_serve`` (DESIGN.md §Serving): synthetic requests
 arrive in ragged bursts, the server pads them into fixed microbatch lanes,
 and every wave streams through the host‖PIM pipeline with the routing
-distribution chosen by ``--plan auto`` (§5.1.2 planner).
+distribution chosen by ``--plan auto`` (§5.1.2 planner).  ``--async`` runs
+the threaded driver instead of the tick loop: submitter threads feed the
+bounded queue concurrently while ``serve_forever`` forms waves on its own
+thread; ``--algorithm em`` serves EM routing (the multi-input pipeline
+stage hand-off).
 
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke --async
     PYTHONPATH=src python -m repro.launch.serve_caps \
-        --network Caps-MN1 --requests 64 --pipeline software --plan auto
+        --network Caps-MN1 --requests 64 --pipeline software --plan auto \
+        --algorithm em --async --submitters 4
 """
 import argparse
+import threading
+import time
 
 import jax
 import numpy as np
 
 from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
+from repro.core.router import RouterSpec
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
 from repro.runtime.caps_serve import CapsServer, ServeConfig
@@ -31,6 +40,50 @@ def arrival_schedule(total: int, mean_per_tick: float, seed: int = 0):
         counts.append(c)
         left -= c
     return counts
+
+
+def _fmt_ms(v) -> str:
+    return "n/a" if v is None else f"{v * 1e3:.1f} ms"
+
+
+def run_sync(server: CapsServer, ds, schedule):
+    """One wave per tick (the caller-cadence loop), then drain."""
+    done = []
+    for tick, count in enumerate(schedule):
+        if count:
+            batch = ds.batch(tick, count)
+            server.submit(batch["images"])
+        done.extend(server.step())
+    done.extend(server.drain())
+    return done
+
+
+def run_async(server: CapsServer, ds, schedule, n_submitters: int):
+    """Threaded driver: ``serve_forever`` forms waves on a background
+    thread while submitter threads feed the queue concurrently (wave
+    formation decoupled from arrival cadence)."""
+    stop = threading.Event()
+    done = []
+    driver = threading.Thread(
+        target=lambda: done.extend(server.serve_forever(stop, poll_s=0.002)))
+    driver.start()
+
+    def submitter(worker: int):
+        for tick, count in enumerate(schedule[worker::n_submitters]):
+            if count:
+                batch = ds.batch(1000 * worker + tick, count)
+                server.submit(batch["images"])
+            time.sleep(0.001)
+
+    threads = [threading.Thread(target=submitter, args=(w,))
+               for w in range(n_submitters)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    driver.join()
+    return done
 
 
 def main():
@@ -49,6 +102,18 @@ def main():
     ap.add_argument("--plan", default="none", choices=("none", "auto"),
                     help="routing-stage distribution: §5.1.2 planner or "
                          "unsharded")
+    ap.add_argument("--algorithm", default="dynamic",
+                    choices=("dynamic", "em"),
+                    help="routing algorithm the waves run (em = the "
+                         "multi-input pipeline stage hand-off)")
+    ap.add_argument("--async", dest="async_mode", action="store_true",
+                    help="threaded driver: serve_forever + concurrent "
+                         "submitter threads instead of the tick loop")
+    ap.add_argument("--submitters", type=int, default=2,
+                    help="submitter threads for --async")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded-queue depth (back-pressure); default "
+                         "unbounded")
     ap.add_argument("--load", type=float, default=0.75,
                     help="offered load as a fraction of wave capacity "
                          "per tick")
@@ -74,35 +139,40 @@ def main():
                                 devices=jax.devices()[:2 * (n // 2)])
     cfg = ServeConfig(microbatch=args.microbatch, n_micro=args.n_micro,
                       pipeline=pipeline, mesh=mesh,
-                      routing_plan="auto" if args.plan == "auto" else None)
+                      routing_plan="auto" if args.plan == "auto" else None,
+                      max_queue=args.max_queue)
+    spec = RouterSpec(algorithm=args.algorithm,
+                      iterations=caps_cfg.routing_iters)
 
     params = capsnet.init_capsnet(jax.random.PRNGKey(0), caps_cfg)
-    server = CapsServer(params, caps_cfg, cfg=cfg)
+    server = CapsServer(params, caps_cfg, spec=spec, cfg=cfg)
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
 
     mean_per_tick = max(1.0, args.load * cfg.wave_lanes)
     schedule = arrival_schedule(args.requests, mean_per_tick)
+    mode = (f"async x {args.submitters} submitters" if args.async_mode
+            else "sync tick loop")
     print(f"{caps_cfg.name}: {args.requests} requests over "
           f"{len(schedule)} ticks (ragged), wave = {cfg.n_micro} x "
           f"{cfg.microbatch} lanes, pipeline={pipeline}, "
-          f"plan={args.plan}")
+          f"plan={args.plan}, algorithm={args.algorithm}, {mode}")
 
-    done = []
-    for tick, count in enumerate(schedule):
-        if count:
-            batch = ds.batch(tick, count)
-            server.submit(batch["images"])
-        done.extend(server.step())
-    done.extend(server.drain())
+    if args.async_mode:
+        done = run_async(server, ds, schedule, max(1, args.submitters))
+    else:
+        done = run_sync(server, ds, schedule)
 
     s = server.metrics.summary()
-    assert s["completed"] == args.requests, (s, args.requests)
+    assert s["submitted"] == s["completed"] + s["shed"], s
+    assert server.pending() == 0, server.pending()
+    assert s["completed"] + s["shed"] == args.requests, (s, args.requests)
     print(f"served {s['completed']} requests in {s['waves']} waves "
-          f"({s['padded_lanes']} padded lanes)")
-    print(f"latency p50 {s['p50_latency_s'] * 1e3:.1f} ms, "
-          f"p90 {s['p90_latency_s'] * 1e3:.1f} ms; "
-          f"throughput {s['throughput_rps']:.1f} req/s")
+          f"({s['padded_lanes']} padded lanes, {s['shed']} shed)")
+    thr = s["throughput_rps"]
+    print(f"latency p50 {_fmt_ms(s['p50_latency_s'])}, "
+          f"p90 {_fmt_ms(s['p90_latency_s'])}; "
+          f"throughput {'n/a' if thr is None else f'{thr:.1f} req/s'}")
     preds = {c.rid: c.pred for c in done}
     print("first predictions:", [preds[r] for r in sorted(preds)[:8]])
 

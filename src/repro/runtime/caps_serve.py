@@ -6,7 +6,26 @@ routed forward compiles exactly once per (spec, plan), and streams waves of
 microbatches through the paper's two-stage pipeline — encoder ("host") stage
 overlapping the routing ("PIM") stage of the previous microbatch, with the
 §5.1 vault distribution optionally running *inside* the routing stage
-(``routing_plan="auto"`` lets the §5.1.2 planner pick the dimension).
+(``routing_plan="auto"`` lets the §5.1.2 planner pick the dimension; a
+tuple of (dim, mesh_axis) pairs shards the stage over one *or several*
+vault axes).
+
+Admission is asynchronous and thread-safe: any number of client threads may
+call ``submit()`` while ``serve_forever(stop_event)`` drives waves on its
+own thread — wave formation is decoupled from caller cadence (a wave forms
+whenever the queue is non-empty, batching whatever has arrived).  Back
+pressure is a bounded queue (``ServeConfig.max_queue``) with a shed
+(tail-drop, counted in ``metrics.shed``) or reject (``QueueFullError``,
+nothing admitted) policy.  The accounting invariant under any interleaving
+(``pending()`` counts queued requests AND the wave in flight, so it holds
+even while ``step()`` is mid-wave on another thread):
+
+    metrics.submitted == metrics.completed + metrics.shed + pending()
+
+Both registered routing algorithms serve: ``RouterSpec(algorithm="dynamic")``
+waves score classes as ‖v‖; ``algorithm="em"`` waves hand the pipeline the
+(votes, a_in) pair — the multi-input stage hand-off of DESIGN.md §Serving —
+and score classes as the EM output activations ``a_out``.
 
 Padding note (DESIGN.md §Serving): the routing logits ``b`` are shared
 across the batch (the paper's Table-2 B-dim aggregation), so batch lanes
@@ -14,18 +33,26 @@ couple through Eq.4 and naive zero-image padding would perturb real lanes
 once biases are non-zero.  The encoder stage therefore multiplies the votes
 by a per-lane mask — masked lanes contribute exactly zero to every
 cross-lane aggregation, making padding bit-invariant for the real lanes.
+(EM keeps no cross-batch state, but the same mask zeroes a padded lane's
+input activations so its votes never weight any Gaussian.)
 
-    server = CapsServer(params, caps_cfg, cfg=ServeConfig())
-    server.submit(images)           # any count, any tick
+    server = CapsServer(params, caps_cfg)
+    server.submit(images)           # any count, any tick, any thread
     done = server.step()            # one wave: [Completion(rid, pred, ...)]
 
-``repro.launch.serve_caps`` is the CLI; ``benchmarks/bench_serving.py``
-sweeps offered load over the pipelined vs unpipelined arms.
+    stop = threading.Event()        # or: the async driver
+    thread = threading.Thread(target=server.serve_forever, args=(stop,))
+
+``repro.launch.serve_caps`` is the CLI (``--async`` for the threaded
+driver); ``benchmarks/bench_serving.py`` sweeps offered load over the
+pipelined / unpipelined / async / EM arms.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
+import threading
 import time
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
 
@@ -37,6 +64,16 @@ from repro.core import router as router_lib
 from repro.models import capsnet
 
 
+class QueueFullError(RuntimeError):
+    """``submit()`` under ``overflow="reject"``: the arrival does not fit
+    the bounded queue.  Admission is atomic — the queue and the admission
+    counters are exactly as before the call (``metrics.rejected`` records
+    the refusal)."""
+
+
+OVERFLOW_POLICIES = ("shed", "reject")
+
+
 # ---------------------------------------------------------------------------
 # Configuration
 # ---------------------------------------------------------------------------
@@ -44,6 +81,9 @@ from repro.models import capsnet
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Shape and execution policy of one serving wave.
+
+    Frozen on purpose: ``make_wave_fn`` compiles the wave executable once
+    per (spec, plan), so plan-affecting fields must not drift afterwards.
 
     microbatch:   lanes per microbatch (the pipeline's transfer unit).
     n_micro:      microbatches per wave; one ``step()`` runs one wave, so
@@ -55,9 +95,15 @@ class ServeConfig:
                   back-to-back per microbatch).
     routing_plan: distribution of the routing stage — None (unsharded),
                   "auto" (§5.1.2 planner picks the dimension), or explicit
-                  ((dim, mesh_axis),) pairs.
-    mesh:         mesh hosting pipeline_axis and/or the routing axis; None
+                  ((dim, mesh_axis), ...) pairs — several pairs shard the
+                  stage over that many vault axes inside the pipe.
+    mesh:         mesh hosting pipeline_axis and/or the routing axes; None
                   uses the router's default single-axis "vault" mesh.
+    max_queue:    bounded-queue depth for back-pressure; None = unbounded.
+    overflow:     what ``submit()`` does when an arrival exceeds the bound:
+                  "shed" admits up to the bound and tail-drops the rest
+                  (counted in ``metrics.shed``); "reject" raises
+                  ``QueueFullError`` admitting nothing.
     """
     microbatch: int = 8
     n_micro: int = 4
@@ -65,6 +111,20 @@ class ServeConfig:
     pipeline_axis: str = "pipe"
     routing_plan: Any = None
     mesh: Optional[jax.sharding.Mesh] = None
+    max_queue: Optional[int] = None
+    overflow: str = "shed"
+
+    def __post_init__(self):
+        if self.microbatch < 1 or self.n_micro < 1:
+            raise ValueError("ServeConfig needs microbatch >= 1 and "
+                             f"n_micro >= 1; got {self.microbatch} x "
+                             f"{self.n_micro}")
+        if self.overflow not in OVERFLOW_POLICIES:
+            raise ValueError(f"unknown overflow policy {self.overflow!r}; "
+                             f"expected one of {OVERFLOW_POLICIES}")
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 or None; got "
+                             f"{self.max_queue}")
 
     @property
     def wave_lanes(self) -> int:
@@ -89,6 +149,8 @@ class Completion:
 class ServeMetrics:
     submitted: int = 0
     completed: int = 0
+    shed: int = 0          # admitted into `submitted`, dropped by back-pressure
+    rejected: int = 0      # refused atomically — never counted in `submitted`
     waves: int = 0
     padded_lanes: int = 0
     latencies_s: List[float] = dataclasses.field(default_factory=list)
@@ -96,12 +158,16 @@ class ServeMetrics:
     t_last_done: Optional[float] = None
 
     def summary(self) -> Dict[str, Any]:
+        """JSON-safe summary: strictly finite numbers or ``None`` (never
+        NaN/Infinity — strict JSON parsers reject those), with nearest-rank
+        percentiles (the ceil(p*n)-th smallest, 1-indexed)."""
         lat = sorted(self.latencies_s)
+        n = len(lat)
 
-        def pct(p: float) -> float:
-            if not lat:
-                return float("nan")
-            return lat[min(len(lat) - 1, int(round(p * (len(lat) - 1))))]
+        def pct(p: float) -> Optional[float]:
+            if n == 0:
+                return None
+            return lat[min(n, max(1, math.ceil(p * n))) - 1]
 
         span = ((self.t_last_done - self.t_first_submit)
                 if self.t_first_submit is not None
@@ -109,12 +175,13 @@ class ServeMetrics:
         return {
             "submitted": self.submitted,
             "completed": self.completed,
+            "shed": self.shed,
+            "rejected": self.rejected,
             "waves": self.waves,
             "padded_lanes": self.padded_lanes,
             "p50_latency_s": pct(0.5),
             "p90_latency_s": pct(0.9),
-            "throughput_rps": (self.completed / span if span > 0
-                               else float(self.completed)),
+            "throughput_rps": (self.completed / span) if span > 0 else None,
         }
 
 
@@ -127,21 +194,40 @@ def make_wave_fn(params, caps_cfg, spec: Optional[router_lib.RouterSpec],
     """Build the jitted wave executable.
 
     wave({"images": (n_micro, microbatch, H, W, C),
-          "mask":   (n_micro, microbatch)}) -> class_probs
+          "mask":   (n_micro, microbatch)}) -> class_scores
                                                (n_micro, microbatch, N_H)
 
     The encoder stage masks the Eq.1 votes per lane (padding invariance,
     see module docstring) and the routing stage runs through
     ``core.router.build_router`` — pipelined per ``cfg.pipeline``, with the
-    routing distribution per ``cfg.routing_plan``.  Constant wave shapes
-    mean exactly one compilation per (spec, plan).
+    routing distribution per ``cfg.routing_plan``.  ``spec.algorithm``
+    selects the stage hand-off: "dynamic" hands the pipeline the votes and
+    scores classes as ‖v‖; "em" hands it the (votes, a_in) pair (a_in = the
+    lane mask broadcast over the L capsules) and scores classes as the EM
+    output activations.  Constant wave shapes mean exactly one compilation
+    per (spec, plan).
     """
     if spec is None:
         spec = router_lib.RouterSpec(iterations=caps_cfg.routing_iters)
+    algo = router_lib.get_algorithm(spec.algorithm)
 
-    def stage_a(micro):
+    def encode(micro):
         votes = capsnet.encode_votes(params, micro["images"], caps_cfg)
         return votes * micro["mask"][:, None, None, None]
+
+    if algo.num_inputs == 1:
+        stage_a = encode
+        score = lambda out: jnp.linalg.norm(out, axis=-1)      # noqa: E731
+    elif spec.algorithm == "em":
+        def stage_a(micro):
+            votes = encode(micro)
+            a_in = jnp.broadcast_to(micro["mask"][:, None], votes.shape[:2])
+            return votes, a_in
+        score = lambda out: out[1]                             # noqa: E731
+    else:
+        raise ValueError(
+            f"no serving wave recipe for algorithm {spec.algorithm!r} "
+            f"({algo.num_inputs} inputs); register one in make_wave_fn")
 
     auto = cfg.routing_plan == "auto"
     axes = (tuple(cfg.routing_plan)
@@ -152,15 +238,19 @@ def make_wave_fn(params, caps_cfg, spec: Optional[router_lib.RouterSpec],
             mesh=cfg.mesh, axes=axes, auto=auto, pipeline=cfg.pipeline,
             pipeline_axis=cfg.pipeline_axis, stage_a=stage_a)
         router = router_lib.build_router(spec, plan)
-        return jax.jit(lambda micro: jnp.linalg.norm(router(micro), axis=-1))
+        return jax.jit(lambda micro: score(router(micro)))
 
     # unpipelined reference arm: same stages, strictly sequential per
     # microbatch (lax.map = scan, so a sharded routing core traces fine).
     plan = (router_lib.ExecutionPlan(mesh=cfg.mesh, axes=axes, auto=auto)
             if (axes or auto or cfg.mesh is not None) else None)
     core = router_lib.build_router(spec, plan)
-    return jax.jit(lambda micro: jnp.linalg.norm(
-        jax.lax.map(lambda m: core(stage_a(m)), micro), axis=-1))
+
+    def run_one(m):
+        h = stage_a(m)
+        return core(*h) if isinstance(h, tuple) else core(h)
+
+    return jax.jit(lambda micro: score(jax.lax.map(run_one, micro)))
 
 
 # ---------------------------------------------------------------------------
@@ -171,47 +261,91 @@ class CapsServer:
     """Continuous-batching CapsNet classification server (DESIGN.md
     §Serving).
 
-    ``submit()`` admits any number of requests at any time; ``step()``
-    drains up to one wave (``cfg.wave_lanes`` requests) from the queue,
-    pads the tail microbatch to the fixed lane count, runs the wave through
-    the pipelined router, and returns per-request completions with
-    queue+compute latency.  ``drain()`` steps until the queue is empty.
+    ``submit()`` admits any number of requests at any time from any thread;
+    ``step()`` drains up to one wave (``cfg.wave_lanes`` requests) from the
+    queue, pads the tail microbatch to the fixed lane count, runs the wave
+    through the pipelined router, and returns per-request completions with
+    queue+compute latency.  ``drain()`` steps until the queue is empty;
+    ``serve_forever(stop_event)`` is the async driver — run it on its own
+    thread while clients submit concurrently.
     """
 
     def __init__(self, params, caps_cfg,
                  spec: Optional[router_lib.RouterSpec] = None,
-                 cfg: ServeConfig = ServeConfig(),
+                 cfg: Optional[ServeConfig] = None,
                  clock: Callable[[], float] = time.perf_counter):
         self.caps_cfg = caps_cfg
-        self.cfg = cfg
+        # cfg=None -> a fresh instance per server (a shared default-arg
+        # instance would alias every server built without an explicit cfg)
+        self.cfg = cfg if cfg is not None else ServeConfig()
         self.clock = clock
         self.metrics = ServeMetrics()
         self._queue: Deque[Request] = collections.deque()
+        self._inflight = 0          # popped for a wave, not yet completed
         self._next_rid = 0
-        self._wave_fn = make_wave_fn(params, caps_cfg, spec, cfg)
+        # one lock guards queue + metrics + rid counter; the condition lets
+        # serve_forever sleep until an admission arrives
+        self._cv = threading.Condition()
+        self._wave_fn = make_wave_fn(params, caps_cfg, spec, self.cfg)
         self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
                              caps_cfg.image_channels)
 
     # -- admission -----------------------------------------------------------
 
     def submit(self, images: Sequence[np.ndarray]) -> List[int]:
-        """Enqueue a ragged arrival of images; returns their request ids."""
+        """Enqueue an arrival of images; returns the admitted request ids.
+
+        Admission is atomic: everything is validated *before* any request
+        enters the queue or any counter moves, so a bad arrival (ragged
+        list, mis-shaped images, full queue under ``overflow="reject"``)
+        leaves the server exactly as it was.  Thread-safe.
+        """
+        if len(images) == 0:
+            return []
+        # -- validate everything first, mutate nothing ----------------------
+        try:
+            arr = np.asarray(images, np.float32)
+        except (ValueError, TypeError) as e:
+            raise ValueError(
+                "ragged arrival: could not assemble the images into one "
+                f"(n,) + {self._image_shape} float array — every image "
+                "must be a numeric array of that shape") from e
+        if arr.ndim != 1 + len(self._image_shape) \
+                or arr.shape[1:] != self._image_shape:
+            got = (arr.shape[1:] if arr.ndim == 1 + len(self._image_shape)
+                   else arr.shape)
+            raise ValueError(f"image shape {got} != {self._image_shape}")
+        n = arr.shape[0]
         now = self.clock()
-        if self.metrics.t_first_submit is None and len(images):
-            self.metrics.t_first_submit = now
-        rids = []
-        for img in np.asarray(images, np.float32):
-            if img.shape != self._image_shape:
-                raise ValueError(f"image shape {img.shape} != "
-                                 f"{self._image_shape}")
-            self._queue.append(Request(self._next_rid, img, now))
-            rids.append(self._next_rid)
-            self._next_rid += 1
-        self.metrics.submitted += len(rids)
+        cfg = self.cfg
+        # -- admit under the lock (back-pressure + enqueue + accounting) ----
+        with self._cv:
+            room = (n if cfg.max_queue is None
+                    else max(0, cfg.max_queue - len(self._queue)))
+            if n > room and cfg.overflow == "reject":
+                self.metrics.rejected += n
+                raise QueueFullError(
+                    f"queue full: arrival of {n} > room {room} "
+                    f"(max_queue={cfg.max_queue}); nothing admitted")
+            admit = min(n, room)
+            if self.metrics.t_first_submit is None:
+                self.metrics.t_first_submit = now
+            rids = []
+            for img in arr[:admit]:
+                self._queue.append(Request(self._next_rid, img, now))
+                rids.append(self._next_rid)
+                self._next_rid += 1
+            self.metrics.submitted += n
+            self.metrics.shed += n - admit
+            self._cv.notify_all()
         return rids
 
     def pending(self) -> int:
-        return len(self._queue)
+        """Requests admitted but not yet completed: queued + the wave in
+        flight — so ``submitted == completed + shed + pending()`` holds at
+        every instant, not just at quiescence."""
+        with self._cv:
+            return len(self._queue) + self._inflight
 
     # -- one wave ------------------------------------------------------------
 
@@ -220,13 +354,16 @@ class CapsServer:
 
         Returns [] when the queue is empty — otherwise pads the admitted
         requests to the constant wave shape (masked lanes, so padding never
-        perturbs real outputs) and completes them.
+        perturbs real outputs) and completes them.  The wave compute runs
+        outside the lock; only queue pops and metric updates hold it.
         """
-        if not self._queue:
-            return []
         cfg = self.cfg
-        take = min(len(self._queue), cfg.wave_lanes)
-        reqs = [self._queue.popleft() for _ in range(take)]
+        with self._cv:
+            if not self._queue:
+                return []
+            take = min(len(self._queue), cfg.wave_lanes)
+            reqs = [self._queue.popleft() for _ in range(take)]
+            self._inflight += take
 
         images = np.zeros((cfg.wave_lanes,) + self._image_shape, np.float32)
         mask = np.zeros((cfg.wave_lanes,), np.float32)
@@ -238,24 +375,63 @@ class CapsServer:
                 (cfg.n_micro, cfg.microbatch) + self._image_shape),
             "mask": jnp.asarray(mask).reshape(cfg.n_micro, cfg.microbatch),
         }
-        probs = self._wave_fn(micro)                 # (n_micro, mb, N_H)
-        preds = np.asarray(jnp.argmax(probs, axis=-1)).reshape(-1)
+        scores = self._wave_fn(micro)                # (n_micro, mb, N_H)
+        preds = np.asarray(jnp.argmax(scores, axis=-1)).reshape(-1)
 
         t_done = self.clock()
         out = []
-        for i, r in enumerate(reqs):
-            lat = t_done - r.t_submit
-            out.append(Completion(r.rid, int(preds[i]), lat))
-            self.metrics.latencies_s.append(lat)
-        self.metrics.completed += take
-        self.metrics.padded_lanes += cfg.wave_lanes - take
-        self.metrics.waves += 1
-        self.metrics.t_last_done = t_done
+        with self._cv:
+            for i, r in enumerate(reqs):
+                lat = t_done - r.t_submit
+                out.append(Completion(r.rid, int(preds[i]), lat))
+                self.metrics.latencies_s.append(lat)
+            self._inflight -= take
+            self.metrics.completed += take
+            self.metrics.padded_lanes += cfg.wave_lanes - take
+            self.metrics.waves += 1
+            self.metrics.t_last_done = t_done
         return out
 
     def drain(self) -> List[Completion]:
         """Step until the queue is empty; returns all completions."""
         out: List[Completion] = []
-        while self._queue:
-            out.extend(self.step())
-        return out
+        while True:
+            got = self.step()
+            if not got:
+                return out
+            out.extend(got)
+
+    # -- async driver --------------------------------------------------------
+
+    def serve_forever(self, stop_event: threading.Event,
+                      poll_s: float = 0.05,
+                      on_completion: Optional[Callable[[Completion], None]]
+                      = None) -> List[Completion]:
+        """Drive waves until ``stop_event`` is set, then drain and return.
+
+        Run this on a dedicated thread; clients call ``submit()``
+        concurrently.  Wave formation is decoupled from caller cadence — a
+        wave forms whenever the queue is non-empty, batching whatever has
+        arrived (up to ``wave_lanes``), and the driver sleeps on the
+        admission condition otherwise (``poll_s`` bounds how long a stop
+        request can go unnoticed).  On stop, everything still queued is
+        drained, so a clean shutdown ends with ``pending() == 0`` and the
+        invariant ``submitted == completed + shed`` (no lost or
+        double-counted requests).
+        """
+        done: List[Completion] = []
+
+        def emit(batch: List[Completion]):
+            done.extend(batch)
+            if on_completion is not None:
+                for c in batch:
+                    on_completion(c)
+
+        while not stop_event.is_set():
+            with self._cv:
+                if not self._queue:
+                    self._cv.wait(timeout=poll_s)
+                    continue
+            emit(self.step())
+        emit(self.drain())
+        return done
