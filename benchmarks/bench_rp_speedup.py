@@ -78,7 +78,11 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
 
     * procedure-fusion eliminates the per-iteration (L,H)/(B,H,C)
       round-trips — only the final v write remains;
-    * bf16 û streaming halves the stream bytes of the only large operand.
+    * bf16 û streaming halves the stream bytes of the only large operand;
+    * the measured sharded arm is the L-only plan, whose STAGE 2 is the
+      softmax-folded kernel (B and H unsharded) — its row uses
+      ``fold=True`` (the plain stage_split model overstates that path by
+      iters·2·L·H·4 bytes).
     """
     model = {
         "iteration_fused": rt_ops.dma_bytes_per_call(
@@ -87,7 +91,11 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
             B, L, H, C, iters, form="procedure"),
         "procedure_fused_bf16": rt_ops.dma_bytes_per_call(
             B, L, H, C, iters, form="procedure", stream_dtype="bf16"),
+        # the measured arm shards L only -> the fold kernel runs
         "sharded_stage_split": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="stage_split", fold=True),
+        # reference: the unfolded stage-split form (B- or H-sharded plans)
+        "sharded_stage_split_unfolded": rt_ops.dma_bytes_per_call(
             B, L, H, C, iters, form="stage_split"),
     }
     it, pf = model["iteration_fused"], model["procedure_fused_fp32"]
@@ -97,6 +105,11 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
             == pf["u_hat_stream_bytes"]), (
         "bf16 streaming does not halve û bytes", model)
     assert pf["total_bytes"] < it["total_bytes"], model
+    assert (model["sharded_stage_split_unfolded"]["total_bytes"]
+            - model["sharded_stage_split"]["total_bytes"]
+            == iters * 2 * L * H * 4), (
+        "fold model must save exactly the per-iteration db round-trip",
+        model)
     return model
 
 

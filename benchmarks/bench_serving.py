@@ -9,9 +9,16 @@ microbatch lanes, and each wave runs through the §4 host‖PIM pipeline
 threaded ``serve_forever`` driver with a concurrent submitter (async arm —
 same pipelined wave executable, admission decoupled from wave formation).
 The EM arms run the same sweep with ``RouterSpec(algorithm="em")`` — the
-multi-input (votes, a_in) pipeline stage hand-off.  Reported per
-(arm, load) cell: median/p90 request latency (queue + compute), throughput,
-and shed count.  Correctness gates assert pipelined == unpipelined class
+multi-input (votes, a_in) pipeline stage hand-off.  The fleet arm
+(DESIGN.md §Fleet) sweeps two tenant classes x offered load — including a
+1.5x overload point — over a 2-replica ``CapsFleet`` with deadline-ordered
+waves and bounded queues, gating that goodput (deadline-met completions)
+degrades gracefully under overload (>= 80% of the 1.0-load goodput) and
+that shed work comes from the doomed pool — expired requests first, then
+the free class; unexpired gold work is never shed.
+Reported per (arm, load) cell: median/p90 request latency (queue +
+compute), throughput, and shed count (plus goodput and the per-tenant
+breakdown for the fleet arm).  Correctness gates assert pipelined == unpipelined class
 scores to <= 1e-5 on an identical wave, for dynamic AND for EM — the
 acceptance bar for the pipeline transform under serving traffic.
 
@@ -33,11 +40,13 @@ from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
 from repro.core.router import RouterSpec
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
+from repro.runtime.caps_fleet import CapsFleet, TenantPolicy
 from repro.runtime.caps_serve import (CapsServer, ServeConfig, ServeMetrics,
                                       make_wave_fn)
+from repro.runtime.elastic import ElasticPolicy
 
 ARMS = ("pipelined", "unpipelined", "async", "em_pipelined",
-        "em_unpipelined")
+        "em_unpipelined", "fleet")
 
 
 def _setup():
@@ -149,6 +158,116 @@ def run_cell_async(server: CapsServer, caps_cfg, total: int,
     return _cell_row(load, server.metrics.summary())
 
 
+def _fleet_tick_s(params, caps_cfg, microbatch: int, n_micro: int,
+                  wave_cache: dict) -> float:
+    """Measured service time of one warm wave — the unit the fleet cells'
+    SLOs are calibrated in (and the compile warm-up for the shared cache)."""
+    fleet = CapsFleet(params, caps_cfg,
+                      cfg=ServeConfig(microbatch=microbatch, n_micro=n_micro,
+                                      pipeline="software",
+                                      queue_order="deadline"),
+                      policy=ElasticPolicy(min_replicas=1, max_replicas=1),
+                      wave_cache=wave_cache)
+    ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
+                              caps_cfg.num_h_caps)
+    lanes = microbatch * n_micro
+    fleet.submit(ds.batch(997, lanes)["images"])
+    fleet.drain()                                    # compile + warm
+    fleet.submit(ds.batch(996, lanes)["images"])
+    t0 = time.perf_counter()
+    fleet.drain()
+    return time.perf_counter() - t0
+
+
+def run_cell_fleet(params, caps_cfg, microbatch: int, n_micro: int,
+                   total: int, load: float, wave_cache: dict,
+                   tick_s: float) -> dict:
+    """One (fleet, offered-load) cell: two tenant classes — "gold"
+    (higher priority, tighter SLO) and "free" — split the offered load
+    over a 2-replica CapsFleet with deadline-ordered waves and bounded
+    replica queues (DESIGN.md §Fleet).  Under overload the shed policy
+    must fall on free/expired requests and goodput (deadline-met
+    completions) must degrade gracefully, not collapse — the gates in
+    ``main``."""
+    lanes = microbatch * n_micro
+    # 2.5 waves of queue per replica: deep enough that the 1.5x overload
+    # backlog mostly queues (goodput degrades gracefully), shallow enough
+    # that back-pressure still sheds — exercising the doomed-first policy
+    cfg = ServeConfig(microbatch=microbatch, n_micro=n_micro,
+                      pipeline="software", queue_order="deadline",
+                      max_queue=(5 * lanes) // 2)
+    tenants = [TenantPolicy("gold", slo_s=8 * tick_s, priority=1),
+               TenantPolicy("free", slo_s=12 * tick_s, priority=0)]
+    fleet = CapsFleet(params, caps_cfg, tenants=tenants, cfg=cfg,
+                      policy=ElasticPolicy(min_replicas=2, max_replicas=2),
+                      wave_cache=wave_cache)
+    ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
+                              caps_cfg.num_h_caps)
+    rng = np.random.default_rng(0)
+    # per-tenant arrivals of load x lanes per tick: combined = load x the
+    # fleet's 2-replica wave capacity, same normalization as the sync arms
+    left = {"gold": total // 2, "free": total - total // 2}
+    tick = 0
+    t0 = time.perf_counter()
+    while any(left.values()) or fleet.pending():
+        counts = {name: min(left[name],
+                            int(rng.poisson(max(1.0, load * lanes))))
+                  for name in ("gold", "free")}
+        # arrivals land as interleaved microbatch-sized requests (not one
+        # burst per tenant): replica queues then hold a mix of classes,
+        # so back-pressure eviction has doomed/free work to prefer
+        done = {name: 0 for name in counts}
+        part = 0
+        while any(done[n] < counts[n] for n in counts):
+            for name in ("gold", "free"):
+                k = min(microbatch, counts[name] - done[name])
+                if k > 0:
+                    fleet.submit(
+                        ds.batch(100 * tick + part, k)["images"],
+                        tenant=name)
+                    done[name] += k
+            part += 1
+        for name in counts:
+            left[name] -= done[name]
+        fleet.step()
+        tick += 1
+    elapsed = time.perf_counter() - t0
+    s = fleet.summary()
+    assert s["pending"] == 0, s
+    assert s["submitted"] == s["completed"] + s["shed"], s
+    for name, t in s["per_tenant"].items():
+        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
+            (name, t)
+    return {"offered_load": load, "requests": s["completed"],
+            "waves": s["waves"], "padded_lanes": s["padded_lanes"],
+            "shed": s["shed"], "shed_expired": s["shed_expired"],
+            "goodput": s["goodput"], "replicas": s["replicas"],
+            "per_tenant": s["per_tenant"],
+            "latency": {"median_s": s["p50_latency_s"],
+                        "p90_s": s["p90_latency_s"]},
+            "throughput_rps": (s["completed"] / elapsed
+                               if elapsed > 0 else None)}
+
+
+def fleet_gates(rows: list) -> None:
+    """Graceful-degradation gates over the fleet sweep: goodput at 1.5x
+    load stays >= 80% of the 1.0-load goodput (absolute deadline-met
+    counts — the system bends, it doesn't collapse), and what *was* shed
+    under overload is free-tenant/expired work, never the gold class."""
+    by_load = {r["offered_load"]: r for r in rows}
+    g10, g15 = by_load[1.0]["goodput"], by_load[1.5]["goodput"]
+    assert g15 >= 0.8 * g10, \
+        f"fleet goodput collapsed under overload: {g15} < 0.8 * {g10}"
+    over = by_load[1.5]
+    pt = over["per_tenant"]
+    # victims must come from the doomed pool: expired requests first, then
+    # the lowest-priority (free) class — a live gold request is never shed
+    # while unexpired work could go instead, so any gold shed is bounded
+    # by the expired count
+    assert pt["gold"]["shed"] <= over["shed_expired"], \
+        f"unexpired gold work was shed: {pt} (expired {over['shed_expired']})"
+
+
 def arm_equivalence(params, caps_cfg, spec, microbatch: int, n_micro: int):
     """Pipelined vs unpipelined class scores on one identical wave."""
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
@@ -175,21 +294,39 @@ def main():
     assert em_ok, f"EM pipelined vs unpipelined diverged: " \
                   f"max|delta|={em_diff}"
 
+    fleet_loads = tuple(loads) + (1.5,)
+    fleet_total = 4 * total
+
+    def emit(arm, r):
+        rows[arm].append(r)
+        print(f"{arm},{r['offered_load']},{r['requests']},{r['waves']},"
+              f"{r['padded_lanes']},{r['shed']},"
+              f"{r['latency']['median_s']:.4f},"
+              f"{r['latency']['p90_s']:.4f},"
+              f"{r['throughput_rps']:.1f}")
+
     rows = {arm: [] for arm in ARMS}
     print("arm,offered_load,requests,waves,padded_lanes,shed,"
           "latency_p50_s,latency_p90_s,throughput_rps")
     for arm in ARMS:
+        if arm == "fleet":
+            # tenants x offered-load sweep over a 2-replica fleet; 1.5x
+            # load is the overload point the degradation gates inspect
+            wave_cache: dict = {}
+            tick_s = _fleet_tick_s(params, caps_cfg, microbatch, n_micro,
+                                   wave_cache)
+            for load in fleet_loads:
+                emit(arm, run_cell_fleet(params, caps_cfg, microbatch,
+                                         n_micro, fleet_total, load,
+                                         wave_cache, tick_s))
+            if not common.smoke():
+                fleet_gates(rows[arm])
+            continue
         server = make_server(params, caps_cfg, arm,
                              _serve_cfg(arm, microbatch, n_micro))
         cell = run_cell_async if arm == "async" else run_cell
         for load in loads:
-            r = cell(server, caps_cfg, total, load)
-            rows[arm].append(r)
-            print(f"{arm},{load},{r['requests']},{r['waves']},"
-                  f"{r['padded_lanes']},{r['shed']},"
-                  f"{r['latency']['median_s']:.4f},"
-                  f"{r['latency']['p90_s']:.4f},"
-                  f"{r['throughput_rps']:.1f}")
+            emit(arm, cell(server, caps_cfg, total, load))
     print(f"# arm max|delta scores|: dynamic {diff:.2e}, em {em_diff:.2e} "
           f"(gate: <= 1e-5); single-device overlap is scheduler-bound — "
           f"see benchmarks/README.md")
@@ -200,6 +337,12 @@ def main():
                        "device": jax.default_backend()},
             "arms": rows,
             "offered_loads": list(loads),
+            "fleet": {"offered_loads": list(fleet_loads),
+                      "requests_per_cell": fleet_total,
+                      "replicas": 2,
+                      "tenants": {"gold": {"priority": 1, "slo_waves": 8},
+                                  "free": {"priority": 0,
+                                           "slo_waves": 12}}},
             "outputs_identical": ok,
             "max_abs_prob_delta": diff,
             "em_outputs_identical": em_ok,

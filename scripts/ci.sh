@@ -70,6 +70,10 @@ EOF
   echo "== smoke: repro.launch.serve_caps --smoke --async (threaded driver) =="
   PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --async
 
+  echo "== smoke: repro.launch.serve_caps --smoke --replicas 2 --tenants 2 (fleet) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke \
+    --replicas 2 --tenants 2 --slo-ms 5000
+
   echo "== smoke: benchmarks.run --smoke --only serving (JSON artifact) =="
   PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only serving
   python - <<'EOF'
@@ -98,8 +102,28 @@ for arm in ("pipelined", "unpipelined", "async", "em_pipelined",
         assert c["latency"]["p90_s"] > 0, (arm, c)
         assert c["throughput_rps"] > 0, (arm, c)
         assert c["shed"] == 0, (arm, c)
+
+# fleet arm: tenants x offered-load sweep with goodput + per-tenant
+# accounting (DESIGN.md §Fleet); the invariant must balance per tenant
+assert "fleet" in d and d["fleet"]["replicas"] == 2, d.get("fleet")
+assert 1.5 in d["fleet"]["offered_loads"], d["fleet"]
+cells = d["arms"]["fleet"]
+assert len(cells) == len(d["fleet"]["offered_loads"]), cells
+for c in cells:
+    assert c["latency"]["median_s"] > 0 and c["throughput_rps"] > 0, c
+    assert isinstance(c["goodput"], int) and c["goodput"] > 0, c
+    assert c["goodput"] <= c["requests"], c
+    pt = c["per_tenant"]
+    assert set(pt) == {"gold", "free"}, pt
+    for name, t in pt.items():
+        for k in ("submitted", "completed", "shed", "goodput", "pending"):
+            assert k in t, (name, k, t)
+        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
+            (name, t)
+    assert c["shed"] == sum(t["shed"] for t in pt.values()), c
 print("BENCH_serving.json OK (strict JSON):", len(d["arms"]), "arms x",
-      len(d["offered_loads"]), "offered-load points")
+      len(d["offered_loads"]), "offered-load points + fleet sweep",
+      d["fleet"]["offered_loads"])
 EOF
 fi
 

@@ -628,9 +628,10 @@ class Router:
 
 
 def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
-    # fusion / stream-dtype vocabularies live with the kernels (ops.py is
-    # the single source of truth); imported lazily like every kernel use.
-    from repro.kernels.routing import ops as routing_ops
+    # fusion / stream-dtype vocabularies live in kernels/routing/vocab.py —
+    # a light module with no pallas import, so every build_router no longer
+    # drags the kernel package in just to spell-check two strings.
+    from repro.kernels.routing import vocab as routing_vocab
     if spec.backend not in BACKENDS:
         raise ValueError(f"unknown backend {spec.backend!r}; expected one "
                          f"of {BACKENDS}")
@@ -639,13 +640,13 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             f"algorithm {algo.name!r} has no {spec.backend!r} backend "
             f"(supported: {algo.backends}); register a kernel for it or "
             "use backend='jnp'")
-    if spec.fusion not in routing_ops.FUSION_LEVELS:
+    if spec.fusion not in routing_vocab.FUSION_LEVELS:
         raise ValueError(f"unknown fusion level {spec.fusion!r}; expected "
-                         f"one of {routing_ops.FUSION_LEVELS}")
-    if spec.stream_dtype not in routing_ops.STREAM_DTYPES:
+                         f"one of {routing_vocab.FUSION_LEVELS}")
+    if spec.stream_dtype not in routing_vocab.STREAM_DTYPES:
         raise ValueError(f"unknown stream_dtype {spec.stream_dtype!r}; "
                          f"expected one of "
-                         f"{tuple(sorted(routing_ops.STREAM_DTYPES))}")
+                         f"{tuple(sorted(routing_vocab.STREAM_DTYPES))}")
     _pallas_dynamic = spec.backend == "pallas" and algo.name == "dynamic"
     if spec.fusion != "auto" and not _pallas_dynamic:
         raise ValueError(

@@ -42,8 +42,11 @@ from repro.kernels.routing.kernel import (em_stage_estep, em_stage_stats,
                                           routing_stage_update,
                                           routing_stage_update_fold,
                                           routing_stage_votes)
-
-STREAM_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+# spec-level vocabulary lives in vocab.py (importable without pallas —
+# core.router._validate uses it); re-exported here for kernel code and
+# historical callers.
+from repro.kernels.routing.vocab import (FUSION_LEVELS, STREAM_DTYPES,
+                                         stream_itemsize as _stream_itemsize)
 
 # û-block VMEM budget for automatic l_tile selection (per buffer; the
 # procedure kernel double-buffers the stream, see procedure_vmem_bytes).
@@ -51,15 +54,6 @@ _U_TILE_BUDGET = 8 * 2 ** 20
 # Total VMEM budget for the procedure megakernel's working set — ~16 MB per
 # v5e core, minus slack for the compiler's own buffers.
 PROCEDURE_VMEM_BUDGET = 14 * 2 ** 20
-
-FUSION_LEVELS = ("auto", "iteration", "procedure")
-
-
-def _stream_itemsize(stream_dtype: str) -> int:
-    if stream_dtype not in STREAM_DTYPES:
-        raise ValueError(f"unknown stream_dtype {stream_dtype!r}; expected "
-                         f"one of {sorted(STREAM_DTYPES)}")
-    return jnp.dtype(STREAM_DTYPES[stream_dtype]).itemsize
 
 
 def pick_l_tile(L: int, bytes_budget: int, row_bytes: int,
@@ -151,7 +145,8 @@ def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
 
 def dma_bytes_per_call(B: int, L: int, H: int, C: int,
                        iterations: int = 3, *, form: str = "iteration",
-                       stream_dtype: str = "fp32") -> dict:
+                       stream_dtype: str = "fp32",
+                       fold: bool = False) -> dict:
     """HBM<->VMEM traffic per routing call, derived from the BlockSpecs of
     each kernel form (kernel.py):
 
@@ -168,6 +163,12 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
       price of distribution) and the inter-stage tensors cross at each
       host/psum boundary: c and db written+read (4·LH), b read+written
       (2·LH), s written+read and v written (3·BHC) per iteration.
+      ``fold=True`` models the softmax-folded STAGE 2
+      (``routing_stage_update_fold`` — taken whenever neither B nor H is
+      sharded, e.g. the L-only plan): the kernel emits the next
+      iteration's c directly and no db crosses, so the logit-sized terms
+      drop from 6·LH to 4·LH (c written+read, b read+written) — the
+      non-fold model overstates that path by iterations·2·L·H·4 bytes.
 
     bf16 streaming (``stream_dtype="bf16"``) halves the û term — the only
     O(B·L·H·C) one — and leaves the fp32 roundtrip terms unchanged.
@@ -188,13 +189,17 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
         roundtrip = vhc
     elif form == "stage_split":
         u_stream = iterations * 2 * u
-        roundtrip = iterations * (6 * bh + 3 * vhc)
+        roundtrip = iterations * ((4 if fold else 6) * bh + 3 * vhc)
     else:
         raise ValueError(f"unknown form {form!r}; expected 'iteration', "
                          "'procedure' or 'stage_split'")
+    if fold and form != "stage_split":
+        raise ValueError("fold=True models the softmax-folded STAGE 2 of "
+                         f"the stage_split form only; got form={form!r}")
     u_f32 = B * L * H * C * 4
     return {
         "form": form,
+        "fold": fold,
         "stream_dtype": stream_dtype,
         "u_hat_stream_bytes": u_stream,
         "roundtrip_bytes": roundtrip,

@@ -10,13 +10,23 @@ bounded queue concurrently while ``serve_forever`` forms waves on its own
 thread; ``--algorithm em`` serves EM routing (the multi-input pipeline
 stage hand-off).
 
+``--replicas N`` / ``--tenants T`` switch to the fleet front-end
+(``repro.runtime.caps_fleet``, DESIGN.md §Fleet): T tenant threads submit
+concurrently to a CapsFleet of N replica servers with deadline-ordered
+waves (``--slo-ms`` sets the per-request SLO), per-tenant accounting, and
+— when ``--max-replicas`` exceeds N — the elastic controller scaling the
+fleet between the two bounds.
+
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke --async
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke \
+        --replicas 2 --tenants 2 --slo-ms 2000
     PYTHONPATH=src python -m repro.launch.serve_caps \
         --network Caps-MN1 --requests 64 --pipeline software --plan auto \
         --algorithm em --async --submitters 4
 """
 import argparse
+import dataclasses
 import threading
 import time
 
@@ -27,7 +37,9 @@ from repro.configs.caps_benchmarks import CAPS_BENCHMARKS, smoke_caps
 from repro.core.router import RouterSpec
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
+from repro.runtime.caps_fleet import CapsFleet, TenantPolicy
 from repro.runtime.caps_serve import CapsServer, ServeConfig
+from repro.runtime.elastic import ElasticPolicy
 
 
 def arrival_schedule(total: int, mean_per_tick: float, seed: int = 0):
@@ -86,6 +98,62 @@ def run_async(server: CapsServer, ds, schedule, n_submitters: int):
     return done
 
 
+def run_fleet(args, caps_cfg, params, ds, cfg: ServeConfig, spec, schedule):
+    """Fleet mode: ``--tenants`` submitter threads (one per tenant) feed a
+    ``--replicas``-sized CapsFleet; waves are deadline-ordered and the
+    per-tenant books must balance on stop (DESIGN.md §Fleet)."""
+    slo_s = None if args.slo_ms is None else args.slo_ms / 1e3
+    tenants = [TenantPolicy(f"t{i}", slo_s=slo_s, priority=i % 2)
+               for i in range(args.tenants)]
+    max_replicas = (args.replicas if args.max_replicas is None
+                    else args.max_replicas)
+    fleet = CapsFleet(
+        params, caps_cfg, tenants=tenants,
+        models={"default": (spec,
+                            dataclasses.replace(cfg,
+                                                queue_order="deadline"))},
+        policy=ElasticPolicy(min_replicas=args.replicas,
+                             max_replicas=max_replicas),
+        control_interval_s=0.05)
+    print(f"fleet: {args.replicas}..{max_replicas} replicas x "
+          f"{args.tenants} tenants, slo="
+          f"{'none' if slo_s is None else f'{args.slo_ms:.0f} ms'}, "
+          f"deadline-ordered waves")
+    fleet.start()
+
+    def submitter(i: int, tenant: TenantPolicy):
+        for tick, count in enumerate(schedule[i::args.tenants]):
+            if count:
+                batch = ds.batch(1000 * i + tick, count)
+                fleet.submit(batch["images"], tenant=tenant.name)
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=submitter, args=(i, t))
+               for i, t in enumerate(tenants)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    s = fleet.stop()
+
+    assert s["pending"] == 0, s
+    assert s["submitted"] == s["completed"] + s["shed"], s
+    assert s["submitted"] == args.requests, (s, args.requests)
+    for name, t in s["per_tenant"].items():
+        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
+            (name, t)
+    print(f"served {s['completed']} requests in {s['waves']} waves across "
+          f"{s['replicas']} replicas ({s['shed']} shed, goodput "
+          f"{s['goodput']}, {len(fleet.completions)} completions)")
+    for name, t in s["per_tenant"].items():
+        print(f"  {name}: submitted {t['submitted']}, completed "
+              f"{t['completed']}, shed {t['shed']}, goodput {t['goodput']}")
+    events = [e for evs in s["scale_events"].values() for e in evs]
+    print(f"latency p50 {_fmt_ms(s['p50_latency_s'])}, "
+          f"p90 {_fmt_ms(s['p90_latency_s'])}; "
+          f"{len(events)} scale events")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--network", default="Caps-MN1",
@@ -114,6 +182,18 @@ def main():
     ap.add_argument("--max-queue", type=int, default=None,
                     help="bounded-queue depth (back-pressure); default "
                          "unbounded")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="> 1 serves through the CapsFleet front-end with "
+                         "this many replica servers (DESIGN.md §Fleet)")
+    ap.add_argument("--max-replicas", type=int, default=None,
+                    help="elastic upper bound for the fleet controller; "
+                         "default = --replicas (no elasticity)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="> 1 submits from this many tenant threads with "
+                         "per-tenant fleet accounting")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request SLO for fleet mode; waves form "
+                         "deadline-first and goodput counts met deadlines")
     ap.add_argument("--load", type=float, default=0.75,
                     help="offered load as a fraction of wave capacity "
                          "per tick")
@@ -145,12 +225,17 @@ def main():
                       iterations=caps_cfg.routing_iters)
 
     params = capsnet.init_capsnet(jax.random.PRNGKey(0), caps_cfg)
-    server = CapsServer(params, caps_cfg, spec=spec, cfg=cfg)
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
 
     mean_per_tick = max(1.0, args.load * cfg.wave_lanes)
     schedule = arrival_schedule(args.requests, mean_per_tick)
+
+    if args.replicas > 1 or args.tenants > 1 or args.slo_ms is not None:
+        run_fleet(args, caps_cfg, params, ds, cfg, spec, schedule)
+        return
+
+    server = CapsServer(params, caps_cfg, spec=spec, cfg=cfg)
     mode = (f"async x {args.submitters} submitters" if args.async_mode
             else "sync tick loop")
     print(f"{caps_cfg.name}: {args.requests} requests over "

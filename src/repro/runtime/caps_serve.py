@@ -43,18 +43,31 @@ input activations so its votes never weight any Gaussian.)
     stop = threading.Event()        # or: the async driver
     thread = threading.Thread(target=server.serve_forever, args=(stop,))
 
+Multi-tenant / SLO serving (DESIGN.md §Fleet): every request carries a
+``tenant`` tag, an optional absolute ``deadline`` and a ``priority``;
+``ServeConfig(queue_order="deadline")`` forms waves from the requests
+closest to violating their SLO — a priority queue ordered by
+``(deadline, arrival)`` instead of FIFO — and the bounded-queue shed
+policy evicts the most-doomed requests (expired first, then lowest
+priority, then earliest deadline) rather than tail-dropping the arrival.
+``ServeMetrics`` keeps a per-tenant breakdown plus goodput
+(deadline-met completions); ``runtime.caps_fleet.CapsFleet`` multiplexes
+N replica servers behind one quota/rate-limited admission front-end.
+
 ``repro.launch.serve_caps`` is the CLI (``--async`` for the threaded
-driver); ``benchmarks/bench_serving.py`` sweeps offered load over the
-pipelined / unpipelined / async / EM arms.
+driver, ``--replicas``/``--tenants`` for the fleet);
+``benchmarks/bench_serving.py`` sweeps offered load over the pipelined /
+unpipelined / async / EM / fleet arms.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import math
 import threading
 import time
-from typing import Any, Callable, Deque, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +84,29 @@ class QueueFullError(RuntimeError):
     the refusal)."""
 
 
+def validate_arrival(images: Sequence[np.ndarray],
+                     image_shape: tuple) -> np.ndarray:
+    """The validate half of validate-then-mutate admission: assemble an
+    arrival into one ``(n,) + image_shape`` float32 array or raise without
+    side effects.  Shared by ``CapsServer.submit`` and the fleet front-end
+    (``runtime.caps_fleet``) so both admission layers reject bad arrivals
+    before any counter moves."""
+    try:
+        arr = np.asarray(images, np.float32)
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "ragged arrival: could not assemble the images into one "
+            f"(n,) + {image_shape} float array — every image "
+            "must be a numeric array of that shape") from e
+    if arr.ndim != 1 + len(image_shape) or arr.shape[1:] != image_shape:
+        got = (arr.shape[1:] if arr.ndim == 1 + len(image_shape)
+               else arr.shape)
+        raise ValueError(f"image shape {got} != {image_shape}")
+    return arr
+
+
 OVERFLOW_POLICIES = ("shed", "reject")
+QUEUE_ORDERS = ("fifo", "deadline")
 
 
 # ---------------------------------------------------------------------------
@@ -101,9 +136,17 @@ class ServeConfig:
                   uses the router's default single-axis "vault" mesh.
     max_queue:    bounded-queue depth for back-pressure; None = unbounded.
     overflow:     what ``submit()`` does when an arrival exceeds the bound:
-                  "shed" admits up to the bound and tail-drops the rest
-                  (counted in ``metrics.shed``); "reject" raises
-                  ``QueueFullError`` admitting nothing.
+                  "shed" admits up to the bound and drops the excess
+                  (counted in ``metrics.shed`` — FIFO tail-drops the
+                  arrival; the deadline queue evicts the most-doomed
+                  requests: expired first, then lowest priority, then
+                  earliest deadline); "reject" raises ``QueueFullError``
+                  admitting nothing.
+    queue_order:  "fifo" (arrival order) or "deadline" — SLO-aware wave
+                  formation: the queue is a priority queue ordered by
+                  (deadline, arrival), so waves form from the requests
+                  closest to violating their SLO (DESIGN.md §Fleet);
+                  deadline-less requests sort last, FIFO among themselves.
     """
     microbatch: int = 8
     n_micro: int = 4
@@ -113,6 +156,7 @@ class ServeConfig:
     mesh: Optional[jax.sharding.Mesh] = None
     max_queue: Optional[int] = None
     overflow: str = "shed"
+    queue_order: str = "fifo"
 
     def __post_init__(self):
         if self.microbatch < 1 or self.n_micro < 1:
@@ -125,6 +169,9 @@ class ServeConfig:
         if self.max_queue is not None and self.max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 or None; got "
                              f"{self.max_queue}")
+        if self.queue_order not in QUEUE_ORDERS:
+            raise ValueError(f"unknown queue_order {self.queue_order!r}; "
+                             f"expected one of {QUEUE_ORDERS}")
 
     @property
     def wave_lanes(self) -> int:
@@ -136,6 +183,26 @@ class Request:
     rid: int
     image: np.ndarray
     t_submit: float
+    tenant: str = "default"
+    deadline: Optional[float] = None    # absolute clock time; None = no SLO
+    priority: int = 0                   # higher = more important to keep
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
+    def order_key(self) -> tuple:
+        """(deadline, arrival) — the SLO-aware wave-formation order.
+        Deadline-less requests sort last, FIFO among themselves."""
+        return (self.deadline if self.deadline is not None else math.inf,
+                self.rid)
+
+    def shed_key(self, now: float) -> tuple:
+        """Victim preference under back-pressure (smaller = shed first):
+        expired first, then lowest priority, then earliest deadline (the
+        most-doomed request; deadline-less requests shed last)."""
+        return (0 if self.expired(now) else 1, self.priority,
+                self.deadline if self.deadline is not None else math.inf,
+                self.rid)
 
 
 @dataclasses.dataclass
@@ -143,6 +210,28 @@ class Completion:
     rid: int
     pred: int
     latency_s: float
+    tenant: str = "default"
+    deadline_met: bool = True           # True when the request had no SLO
+
+
+@dataclasses.dataclass
+class TenantMetrics:
+    """Per-tenant slice of the admission/completion accounting — the same
+    invariant holds per tenant: submitted == completed + shed + pending."""
+    submitted: int = 0
+    completed: int = 0
+    shed: int = 0
+    rejected: int = 0
+    deadline_met: int = 0   # completions inside their SLO (goodput)
+
+    @property
+    def pending(self) -> int:
+        return self.submitted - self.completed - self.shed
+
+    def summary(self) -> Dict[str, int]:
+        return {"submitted": self.submitted, "completed": self.completed,
+                "shed": self.shed, "rejected": self.rejected,
+                "deadline_met": self.deadline_met, "pending": self.pending}
 
 
 @dataclasses.dataclass
@@ -153,9 +242,19 @@ class ServeMetrics:
     rejected: int = 0      # refused atomically — never counted in `submitted`
     waves: int = 0
     padded_lanes: int = 0
+    deadline_met: int = 0  # completions inside their SLO (goodput)
+    shed_expired: int = 0  # shed victims already past deadline at eviction
     latencies_s: List[float] = dataclasses.field(default_factory=list)
+    tenants: Dict[str, TenantMetrics] = dataclasses.field(
+        default_factory=dict)
     t_first_submit: Optional[float] = None
     t_last_done: Optional[float] = None
+
+    def tenant(self, name: str) -> TenantMetrics:
+        t = self.tenants.get(name)
+        if t is None:
+            t = self.tenants[name] = TenantMetrics()
+        return t
 
     def summary(self) -> Dict[str, Any]:
         """JSON-safe summary: strictly finite numbers or ``None`` (never
@@ -179,6 +278,10 @@ class ServeMetrics:
             "rejected": self.rejected,
             "waves": self.waves,
             "padded_lanes": self.padded_lanes,
+            "goodput": self.deadline_met,
+            "shed_expired": self.shed_expired,
+            "per_tenant": {name: t.summary()
+                           for name, t in sorted(self.tenants.items())},
             "p50_latency_s": pct(0.5),
             "p90_latency_s": pct(0.9),
             "throughput_rps": (self.completed / span) if span > 0 else None,
@@ -273,50 +376,96 @@ class CapsServer:
     def __init__(self, params, caps_cfg,
                  spec: Optional[router_lib.RouterSpec] = None,
                  cfg: Optional[ServeConfig] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 wave_fn: Optional[Callable] = None,
+                 watchdog=None):
         self.caps_cfg = caps_cfg
         # cfg=None -> a fresh instance per server (a shared default-arg
         # instance would alias every server built without an explicit cfg)
         self.cfg = cfg if cfg is not None else ServeConfig()
         self.clock = clock
         self.metrics = ServeMetrics()
-        self._queue: Deque[Request] = collections.deque()
+        # FIFO waves pop arrival order from a deque; deadline waves pop the
+        # (deadline, arrival) min from a heap — both are `self._queue`
+        # (len()/truthiness shared), only push/pop differ.
+        self._queue = (collections.deque()
+                       if self.cfg.queue_order == "fifo" else [])
         self._inflight = 0          # popped for a wave, not yet completed
         self._next_rid = 0
         # one lock guards queue + metrics + rid counter; the condition lets
         # serve_forever sleep until an admission arrives
         self._cv = threading.Condition()
-        self._wave_fn = make_wave_fn(params, caps_cfg, spec, self.cfg)
+        # wave_fn injection: replica fleets compile once per (spec, plan)
+        # FLEET-wide and hand every replica the same executable
+        # (runtime.caps_fleet); watchdog: a straggler.StepWatchdog timing
+        # every wave (the fleet's p90/straggler signal).
+        self._wave_fn = (wave_fn if wave_fn is not None
+                         else make_wave_fn(params, caps_cfg, spec, self.cfg))
+        self.watchdog = watchdog
         self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
                              caps_cfg.image_channels)
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, images: Sequence[np.ndarray]) -> List[int]:
+    def _push(self, req: Request) -> None:
+        if self.cfg.queue_order == "fifo":
+            self._queue.append(req)
+        else:
+            heapq.heappush(self._queue, (req.order_key(), req))
+
+    def _pop_next(self) -> Request:
+        if self.cfg.queue_order == "fifo":
+            return self._queue.popleft()
+        return heapq.heappop(self._queue)[1]
+
+    def _evict_excess(self, now: float) -> None:
+        """Deadline-queue shed: drop queue entries beyond ``max_queue``,
+        preferring the most-doomed (expired first, then lowest priority,
+        then earliest deadline) — never random, never the freshest arrival
+        just because it arrived last.  Caller holds the lock."""
+        excess = len(self._queue) - self.cfg.max_queue
+        if excess <= 0:
+            return
+        reqs = [r for _, r in self._queue]
+        reqs.sort(key=lambda r: r.shed_key(now))
+        victims, keep = reqs[:excess], reqs[excess:]
+        self._queue[:] = [(r.order_key(), r) for r in keep]
+        heapq.heapify(self._queue)
+        for r in victims:
+            self.metrics.shed += 1
+            self.metrics.tenant(r.tenant).shed += 1
+            if r.expired(now):
+                self.metrics.shed_expired += 1
+
+    def submit(self, images: Sequence[np.ndarray], *,
+               tenant: str = "default",
+               deadline_s: Optional[float] = None,
+               priority: int = 0) -> List[int]:
         """Enqueue an arrival of images; returns the admitted request ids.
+
+        ``tenant`` tags the per-tenant metrics slice; ``deadline_s`` is the
+        arrival's SLO in seconds from now (absolute deadline = now +
+        deadline_s; None = no SLO); ``priority`` only affects which
+        requests the deadline-queue shed policy evicts (higher = kept).
 
         Admission is atomic: everything is validated *before* any request
         enters the queue or any counter moves, so a bad arrival (ragged
         list, mis-shaped images, full queue under ``overflow="reject"``)
-        leaves the server exactly as it was.  Thread-safe.
+        leaves the server exactly as it was.  Thread-safe.  Under
+        ``queue_order="deadline"`` + ``overflow="shed"`` an admitted rid
+        may still be evicted by a *later* arrival's back-pressure (counted
+        in ``metrics.shed``; its completion then never arrives).
         """
         if len(images) == 0:
             return []
         # -- validate everything first, mutate nothing ----------------------
-        try:
-            arr = np.asarray(images, np.float32)
-        except (ValueError, TypeError) as e:
-            raise ValueError(
-                "ragged arrival: could not assemble the images into one "
-                f"(n,) + {self._image_shape} float array — every image "
-                "must be a numeric array of that shape") from e
-        if arr.ndim != 1 + len(self._image_shape) \
-                or arr.shape[1:] != self._image_shape:
-            got = (arr.shape[1:] if arr.ndim == 1 + len(self._image_shape)
-                   else arr.shape)
-            raise ValueError(f"image shape {got} != {self._image_shape}")
+        arr = validate_arrival(images, self._image_shape)
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0 or None; got "
+                             f"{deadline_s}")
         n = arr.shape[0]
         now = self.clock()
+        deadline = None if deadline_s is None else now + deadline_s
         cfg = self.cfg
         # -- admit under the lock (back-pressure + enqueue + accounting) ----
         with self._cv:
@@ -324,19 +473,30 @@ class CapsServer:
                     else max(0, cfg.max_queue - len(self._queue)))
             if n > room and cfg.overflow == "reject":
                 self.metrics.rejected += n
+                self.metrics.tenant(tenant).rejected += n
                 raise QueueFullError(
                     f"queue full: arrival of {n} > room {room} "
                     f"(max_queue={cfg.max_queue}); nothing admitted")
-            admit = min(n, room)
+            # FIFO tail-drops the arrival's excess; the deadline queue
+            # admits everything then evicts the most-doomed entries
+            # (_evict_excess), which may or may not be from this arrival.
+            admit = n if cfg.queue_order == "deadline" else min(n, room)
             if self.metrics.t_first_submit is None:
                 self.metrics.t_first_submit = now
             rids = []
             for img in arr[:admit]:
-                self._queue.append(Request(self._next_rid, img, now))
+                self._push(Request(self._next_rid, img, now, tenant=tenant,
+                                   deadline=deadline, priority=priority))
                 rids.append(self._next_rid)
                 self._next_rid += 1
             self.metrics.submitted += n
-            self.metrics.shed += n - admit
+            self.metrics.tenant(tenant).submitted += n
+            if cfg.queue_order == "deadline":
+                if cfg.max_queue is not None and cfg.overflow == "shed":
+                    self._evict_excess(now)
+            else:
+                self.metrics.shed += n - admit
+                self.metrics.tenant(tenant).shed += n - admit
             self._cv.notify_all()
         return rids
 
@@ -362,9 +522,12 @@ class CapsServer:
             if not self._queue:
                 return []
             take = min(len(self._queue), cfg.wave_lanes)
-            reqs = [self._queue.popleft() for _ in range(take)]
+            reqs = [self._pop_next() for _ in range(take)]
             self._inflight += take
+            wave_index = self.metrics.waves
 
+        if self.watchdog is not None:
+            self.watchdog.start(wave_index)
         images = np.zeros((cfg.wave_lanes,) + self._image_shape, np.float32)
         mask = np.zeros((cfg.wave_lanes,), np.float32)
         for i, r in enumerate(reqs):
@@ -377,14 +540,23 @@ class CapsServer:
         }
         scores = self._wave_fn(micro)                # (n_micro, mb, N_H)
         preds = np.asarray(jnp.argmax(scores, axis=-1)).reshape(-1)
+        if self.watchdog is not None:
+            self.watchdog.stop()
 
         t_done = self.clock()
         out = []
         with self._cv:
             for i, r in enumerate(reqs):
                 lat = t_done - r.t_submit
-                out.append(Completion(r.rid, int(preds[i]), lat))
+                met = r.deadline is None or t_done <= r.deadline
+                out.append(Completion(r.rid, int(preds[i]), lat,
+                                      tenant=r.tenant, deadline_met=met))
                 self.metrics.latencies_s.append(lat)
+                t = self.metrics.tenant(r.tenant)
+                t.completed += 1
+                if met:
+                    self.metrics.deadline_met += 1
+                    t.deadline_met += 1
             self._inflight -= take
             self.metrics.completed += take
             self.metrics.padded_lanes += cfg.wave_lanes - take

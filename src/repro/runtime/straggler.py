@@ -11,6 +11,7 @@ restart wiring lives in launch/train.py.
 from __future__ import annotations
 
 import collections
+import math
 import queue
 import threading
 import time
@@ -44,10 +45,17 @@ class StepWatchdog:
         return dt
 
     def median(self) -> Optional[float]:
+        return self.percentile(0.5)
+
+    def percentile(self, p: float) -> Optional[float]:
+        """Nearest-rank percentile of the rolling window (None when empty)
+        — p90 wave latency is the fleet controller's scale-up signal
+        (runtime.caps_fleet, DESIGN.md §Fleet)."""
         if not self.durations:
             return None
         s = sorted(self.durations)
-        return s[len(s) // 2]
+        rank = min(len(s), max(1, math.ceil(p * len(s))))
+        return s[rank - 1]
 
 
 class Prefetcher:

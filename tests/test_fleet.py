@@ -1,0 +1,328 @@
+"""CapsFleet invariants (runtime.caps_fleet, DESIGN.md §Fleet):
+
+* threaded multi-tenant admission holds, per tenant,
+  submitted == completed + shed + pending — under concurrent submitters,
+  quotas, rate limits and replica back-pressure;
+* deadline-ordered wave formation never completes a later-deadline request
+  in an earlier wave than an earlier-deadline one (same tenant, equal
+  priority);
+* the shed policy prefers already-doomed requests (expired first, then
+  lowest priority) over tail-dropping;
+* the elastic controller scales up under sustained queue depth and drains
+  a replica cleanly on scale-down (no request lost, metrics retired);
+* fleet-wide compile-once: replicas — including ones added by scale-up —
+  share one wave executable per (spec, plan);
+* admission atomicity: quota/rate rejection and unknown-tenant strictness
+  leave the fleet untouched.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.caps_benchmarks import CapsConfig
+from repro.runtime import caps_fleet, caps_serve
+from repro.models import capsnet
+from repro.runtime.caps_fleet import (CapsFleet, FleetAdmissionError,
+                                      TenantPolicy)
+from repro.runtime.caps_serve import CapsServer, ServeConfig
+from repro.runtime.elastic import ElasticPolicy
+
+
+def tiny_caps() -> CapsConfig:
+    return CapsConfig("Caps-tiny", "synthetic", 8, 72, 10, 2,
+                      caps_channels=2, conv_channels=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_caps()
+    params = capsnet.init_capsnet(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    images = rng.random((16, cfg.image_hw, cfg.image_hw,
+                         cfg.image_channels), np.float32)
+    return cfg, params, images
+
+
+def serve_cfg(**kw) -> ServeConfig:
+    base = dict(microbatch=2, n_micro=2, pipeline=None,
+                queue_order="deadline")
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+class FakeClock:
+    """Deterministic clock for deadline/shed ordering tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def check_tenant_invariant(summary):
+    for name, t in summary["per_tenant"].items():
+        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
+            (name, t)
+
+
+# ---------------------------------------------------------------------------
+# Admission
+# ---------------------------------------------------------------------------
+
+def test_quota_throttles_and_invariant_holds(setup):
+    cfg, params, images = setup
+    fleet = CapsFleet(params, cfg, tenants=[TenantPolicy("q", quota=6)],
+                      cfg=serve_cfg())
+    fleet.submit(images[:4], tenant="q")
+    fleet.submit(images[:4], tenant="q")   # pending 4, room 2 -> throttle 2
+    ts = fleet.tenant_summary()["q"]
+    assert ts["submitted"] == 8 and ts["forwarded"] == 6
+    assert ts["shed"] == ts["shed_admission"] == 2
+    fleet.drain()
+    ts = fleet.tenant_summary()["q"]
+    assert ts["completed"] == 6 and ts["pending"] == 0
+    check_tenant_invariant(fleet.summary())
+
+
+def test_rate_limit_token_bucket(setup):
+    cfg, params, images = setup
+    clock = FakeClock()
+    fleet = CapsFleet(params, cfg,
+                      tenants=[TenantPolicy("r", rate=2.0, burst=4)],
+                      cfg=serve_cfg(), clock=clock)
+    assert len(fleet.submit(images[:6], tenant="r")) == 4   # burst
+    assert len(fleet.submit(images[:2], tenant="r")) == 0   # bucket empty
+    clock.t += 1.0                                          # refill 2 tokens
+    assert len(fleet.submit(images[:6], tenant="r")) == 2
+    ts = fleet.tenant_summary()["r"]
+    assert ts["forwarded"] == 6 and ts["shed_admission"] == 8
+    fleet.drain()
+    check_tenant_invariant(fleet.summary())
+
+
+def test_reject_is_atomic(setup):
+    cfg, params, images = setup
+    fleet = CapsFleet(params, cfg, tenants=[TenantPolicy("q", quota=2)],
+                      cfg=serve_cfg(), overflow="reject")
+    with pytest.raises(FleetAdmissionError):
+        fleet.submit(images[:4], tenant="q")
+    ts = fleet.tenant_summary()["q"]
+    assert ts["submitted"] == 0 and ts["rejected"] == 4
+    assert fleet.pending() == 0
+    # a fitting arrival still admits normally afterwards
+    assert len(fleet.submit(images[:2], tenant="q")) == 2
+
+
+def test_strict_tenants_and_bad_arrival_mutate_nothing(setup):
+    cfg, params, images = setup
+    fleet = CapsFleet(params, cfg, tenants=[TenantPolicy("a")],
+                      cfg=serve_cfg(), strict_tenants=True)
+    with pytest.raises(KeyError):
+        fleet.submit(images[:2], tenant="nobody")
+    with pytest.raises(ValueError):
+        fleet.submit(np.zeros((2, 3, 3, 1), np.float32), tenant="a")
+    assert fleet.pending() == 0
+    assert fleet.summary()["submitted"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware wave formation + shed preference (replica level)
+# ---------------------------------------------------------------------------
+
+def test_deadline_order_across_waves(setup):
+    """Within one tenant at equal priority, a later-deadline request never
+    completes in an earlier wave than an earlier-deadline one."""
+    cfg, params, images = setup
+    clock = FakeClock()
+    server = CapsServer(params, cfg, cfg=serve_cfg(), clock=clock)
+    deadlines = [5.0, 1.0, 9.0, 3.0, 7.0, 2.0, 8.0, 4.0]
+    rid_deadline = {}
+    for i, d in enumerate(deadlines):
+        (rid,) = server.submit(images[i:i + 1], deadline_s=d)
+        rid_deadline[rid] = d
+    wave_of = {}
+    wave = 0
+    while True:
+        done = server.step()
+        if not done:
+            break
+        for c in done:
+            wave_of[c.rid] = wave
+        wave += 1
+    assert wave == 2 and len(wave_of) == 8
+    for r1, d1 in rid_deadline.items():
+        for r2, d2 in rid_deadline.items():
+            if d1 < d2:
+                assert wave_of[r1] <= wave_of[r2], (d1, d2, wave_of)
+
+
+def test_shed_prefers_doomed_requests(setup):
+    """Back-pressure eviction targets expired requests first, then the
+    lowest priority — the freshest arrival is not the default victim."""
+    cfg, params, images = setup
+    clock = FakeClock()
+    server = CapsServer(params, cfg, cfg=serve_cfg(max_queue=8),
+                        clock=clock)
+    server.submit(images[:2], tenant="doomed", deadline_s=1.0)
+    clock.t = 2.0                                    # those two expire
+    server.submit(images[:3], tenant="low", deadline_s=10.0, priority=0)
+    server.submit(images[:3], tenant="high", deadline_s=10.0, priority=1)
+    # queue is full (8); this arrival forces 3 evictions: the 2 expired
+    # first, then 1 lowest-priority
+    server.submit(images[:3], tenant="high", deadline_s=10.0, priority=1)
+    m = server.metrics
+    assert m.shed == 3 and m.shed_expired == 2
+    assert m.tenants["doomed"].shed == 2
+    assert m.tenants["low"].shed == 1
+    assert m.tenants["high"].shed == 0
+    server.drain()
+    assert m.submitted == m.completed + m.shed
+
+
+# ---------------------------------------------------------------------------
+# Threaded multi-tenant invariant
+# ---------------------------------------------------------------------------
+
+def test_threaded_multitenant_invariant(setup):
+    """Concurrent submitters across tenants (one quota'd, one rated, one
+    free) against a started fleet: after stop(), every tenant's books
+    balance and nothing is pending."""
+    cfg, params, images = setup
+    tenants = [TenantPolicy("gold", slo_s=30.0, priority=1),
+               TenantPolicy("quota", quota=8),
+               TenantPolicy("rated", rate=200.0, burst=8)]
+    fleet = CapsFleet(params, cfg, tenants=tenants,
+                      cfg=serve_cfg(max_queue=32),
+                      policy=ElasticPolicy(min_replicas=2, max_replicas=2),
+                      control_interval_s=0.05)
+    fleet.start()
+    per_thread, arrivals = 6, 3
+
+    def client(tenant):
+        for _ in range(per_thread):
+            fleet.submit(images[:arrivals], tenant=tenant)
+            time.sleep(0.002)
+
+    threads = [threading.Thread(target=client, args=(t.name,))
+               for t in tenants for _ in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    s = fleet.stop()
+    assert s["pending"] == 0
+    check_tenant_invariant(s)
+    for t in tenants:
+        assert s["per_tenant"][t.name]["submitted"] == \
+            2 * per_thread * arrivals
+    assert s["submitted"] == s["completed"] + s["shed"]
+    # goodput: gold's 30s SLO is unmissable here — all completions count
+    g = s["per_tenant"]["gold"]
+    assert g["goodput"] == g["completed"]
+
+
+# ---------------------------------------------------------------------------
+# Elastic scale-up / scale-down
+# ---------------------------------------------------------------------------
+
+def test_elastic_scales_up_and_drains_down(setup):
+    """Sustained backlog adds a replica (reusing the cached wave fn);
+    sustained idleness drains one cleanly — its queued work completes and
+    its metrics are retired into the fleet aggregate."""
+    cfg, params, images = setup
+    # slow_p90_factor is effectively off: the first wave's duration includes
+    # the jit compile, which would otherwise read as a p90 straggler and
+    # keep voting "up" against the idle-queue down-signal
+    fleet = CapsFleet(params, cfg, cfg=serve_cfg(),
+                      policy=ElasticPolicy(min_replicas=1, max_replicas=2,
+                                           up_patience=2, down_patience=2,
+                                           slow_p90_factor=1e9))
+    assert fleet.n_replicas() == 1
+    g = fleet._groups["default"]
+    shared_fn = g["wave_fn"]
+
+    # sustained depth: backlog = 12 / (1 * 4) = 3 > 1.5 for two ticks
+    fleet.submit(images[:12])
+    assert fleet.control_tick() == {"default": "hold"}   # patience 1/2
+    assert fleet.control_tick() == {"default": "up"}
+    assert fleet.n_replicas() == 2
+    assert all(r.server._wave_fn is shared_fn
+               for r in g["replicas"])                   # compile-once
+
+    done = fleet.drain()
+    assert len(done) == 12
+
+    # sustained idleness: backlog 0 < 0.25 for two ticks -> drain one
+    assert fleet.control_tick() == {"default": "hold"}   # patience 1/2
+    assert fleet.control_tick() == {"default": "down"}
+    fleet.control_tick()                                 # reap the drained
+    assert fleet.n_replicas() == 1
+    s = fleet.summary()
+    assert s["replicas_retired"] == 1
+    assert s["completed"] == 12 and s["pending"] == 0
+    assert [e["decision"] for e in s["scale_events"]["default"]] == \
+        ["up", "down"]
+
+
+def test_scale_down_never_below_min(setup):
+    cfg, params, images = setup
+    fleet = CapsFleet(params, cfg, cfg=serve_cfg(),
+                      policy=ElasticPolicy(min_replicas=1, max_replicas=2,
+                                           up_patience=1, down_patience=1,
+                                           slow_p90_factor=1e9))
+    for _ in range(4):
+        fleet.control_tick()                             # idle ticks
+    assert fleet.n_replicas() == 1
+
+
+def test_threaded_scale_up_loses_nothing(setup):
+    """Scale-up mid-serve: the new replica joins the same books — total
+    completions + shed still equal submissions."""
+    cfg, params, images = setup
+    fleet = CapsFleet(params, cfg, cfg=serve_cfg(max_queue=64),
+                      policy=ElasticPolicy(min_replicas=1, max_replicas=3,
+                                           up_patience=1, down_patience=8),
+                      control_interval_s=0.02)
+    fleet.start()
+    for _ in range(12):
+        fleet.submit(images[:4])
+        time.sleep(0.005)
+    deadline = time.monotonic() + 20.0
+    while fleet.pending() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    s = fleet.stop()
+    assert s["pending"] == 0
+    assert s["submitted"] == 48 == s["completed"] + s["shed"]
+    assert len(fleet.completions) == s["completed"]
+    check_tenant_invariant(s)
+
+
+# ---------------------------------------------------------------------------
+# Mixed (spec, plan) groups + fleet-wide wave cache
+# ---------------------------------------------------------------------------
+
+def test_mixed_model_groups_share_wave_cache(setup):
+    """Two groups with the same (spec, plan) share one compiled wave fn;
+    a distinct plan gets its own.  Both serve side by side."""
+    cfg, params, images = setup
+    from repro.core.router import RouterSpec
+    scfg = serve_cfg()
+    big = serve_cfg(microbatch=4)
+    spec = RouterSpec(iterations=cfg.routing_iters)
+    fleet = CapsFleet(params, cfg,
+                      models={"a": (spec, scfg), "b": (spec, scfg),
+                              "c": (spec, big)})
+    g = fleet._groups
+    assert g["a"]["wave_fn"] is g["b"]["wave_fn"]
+    assert g["a"]["wave_fn"] is not g["c"]["wave_fn"]
+    fleet.submit(images[:3], model="a")
+    fleet.submit(images[:3], model="c")
+    fleet.drain()
+    s = fleet.summary()
+    assert s["completed"] == 6 and s["pending"] == 0
+    with pytest.raises(KeyError):
+        fleet.submit(images[:1], model="nope")

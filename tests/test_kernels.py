@@ -238,6 +238,38 @@ def test_dma_model_three_forms():
         rt_ops.dma_bytes_per_call(B, L, H, C, form="fused")
 
 
+def test_dma_model_stage_split_fold():
+    """The fold variant of the stage_split form matches the fold kernel's
+    actual traffic (regression for the L-sharded arm, which took the fold
+    path but was modeled with the unfolded 6·LH logit terms — an
+    iters·2·L·H·4-byte overstatement).
+
+    Per iteration the fold path's non-û crossings, read straight off the
+    two kernels' BlockSpecs (kernel.py):
+
+        routing_stage_votes:        c in (LH) ........... s out (BHC)
+        routing_stage_update_fold:  s in (BHC), b in (LH)
+                                    -> v out (BHC), b out (LH), c out (LH)
+
+    i.e. 4·LH + 3·BHC fp32 words — no db ever crosses (the kernel folds
+    Eq.4+5 and emits the next iteration's c directly)."""
+    B, L, H, C, iters = 4, 128, 10, 16, 3
+    f = 4
+    kernel_traffic = iters * ((4 * L * H + 3 * B * H * C) * f)
+    fold = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="stage_split",
+                                     fold=True)
+    plain = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="stage_split")
+    assert fold["roundtrip_bytes"] == kernel_traffic
+    assert fold["fold"] is True and plain["fold"] is False
+    # û still streams twice per iteration — folding only kills the logit
+    # round-trip, never the distribution double-stream
+    assert fold["u_hat_stream_bytes"] == plain["u_hat_stream_bytes"]
+    assert (plain["total_bytes"] - fold["total_bytes"]
+            == iters * 2 * L * H * 4)
+    with pytest.raises(ValueError, match="fold"):
+        rt_ops.dma_bytes_per_call(B, L, H, C, form="procedure", fold=True)
+
+
 def test_stage_update_fold_matches_split(key):
     """routing_stage_update_fold == routing_stage_update + host softmax
     (the folded Eq.5 path the sharded form takes when B/H are unsharded)."""
