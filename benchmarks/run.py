@@ -19,6 +19,7 @@ the perf trajectory survives the run.
 | pipeline         | Fig.8/§6.3 — host||PIM pipelined execution         |
 | serving          | Fig.8 served end-to-end — load sweep, 2 arms       |
 | roofline         | (this repro) §Roofline terms from the dry-run      |
+| train            | §5.2 for backprop — fused-VJP vs jnp train step    |
 """
 from __future__ import annotations
 
@@ -30,7 +31,7 @@ import time
 import traceback
 
 BENCHES = ("layer_breakdown", "rp_speedup", "distribution", "accuracy",
-           "scaling", "pipeline", "serving", "roofline")
+           "scaling", "pipeline", "serving", "roofline", "train")
 
 
 def _provenance() -> dict:

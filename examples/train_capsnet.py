@@ -5,6 +5,11 @@ step-indexed resume.
 
     PYTHONPATH=src python examples/train_capsnet.py --steps 200
     PYTHONPATH=src python examples/train_capsnet.py --steps 300  # resumes
+    PYTHONPATH=src python examples/train_capsnet.py --smoke --routing fused
+
+``--routing fused`` trains through the procedure megakernel's recompute-b
+custom VJP (DESIGN.md §Training) — the backward replays the routing loop
+instead of spilling per-iteration residuals.
 """
 import argparse
 import os
@@ -30,13 +35,19 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--routing", choices=("exact", "approx", "fused"),
                     default="exact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: a dozen steps, one tiny eval batch")
     args = ap.parse_args()
+    if args.smoke:
+        args.steps = min(args.steps, 12)
+        args.ckpt_every = min(args.ckpt_every, 6)
 
     cfg = smoke_caps()
     router = build_router(RouterSpec(
         iterations=cfg.routing_iters,
         use_approx=args.routing == "approx",
-        backend="pallas" if args.routing == "fused" else "jnp"))
+        backend="pallas" if args.routing == "fused" else "jnp",
+        differentiable=args.routing == "fused"))
     ocfg = AdamWConfig(lr=1e-3, weight_decay=0.0)
     key = jax.random.PRNGKey(0)
 
@@ -73,7 +84,7 @@ def main():
                                        jnp.asarray(b["images"]),
                                        jnp.asarray(b["labels"]), lr_scale)
         watchdog.stop()
-        if (i + 1) % 20 == 0:
+        if (i + 1) % (4 if args.smoke else 20) == 0:
             print(f"step {i + 1:4d}  loss {float(loss):.4f}  "
                   f"acc {float(m['accuracy']):.3f}")
         if (i + 1) % args.ckpt_every == 0:
@@ -82,13 +93,14 @@ def main():
 
     # final eval
     hits = n = 0
-    for j in range(1000, 1004):
-        b = ds.batch(j, 64)
+    eval_batches, eval_bs = (1, 32) if args.smoke else (4, 64)
+    for j in range(1000, 1000 + eval_batches):
+        b = ds.batch(j, eval_bs)
         out = capsnet.forward(params, jnp.asarray(b["images"]), cfg,
                               router=router)
         hits += int((jnp.argmax(out["class_probs"], -1)
                      == jnp.asarray(b["labels"])).sum())
-        n += 64
+        n += eval_bs
     print(f"eval accuracy ({args.routing} routing): {hits / n:.4f}")
 
 

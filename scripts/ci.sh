@@ -20,6 +20,12 @@ if [[ "${1:-}" != "--fast" ]]; then
     "tests/test_kernels.py::test_routing_procedure_matches_iteration_fused" \
     "tests/test_router.py::test_fusion_procedure_matches_jnp"
 
+  echo "== grad parity: recompute-b custom VJP vs jnp autodiff =="
+  python -m pytest -q \
+    "tests/test_kernels.py::test_procedure_vjp_grad_parity" \
+    "tests/test_router.py::test_differentiable_router_grad_matches_jnp" \
+    "tests/test_router.py::test_capsnet_train_step_auto_plan_trains_fused"
+
   echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
   PYTHONPATH=src python examples/quickstart.py
 
@@ -62,6 +68,54 @@ for row in arms:
     assert row["max_abs_delta_vs_jnp"]["procedure_fused"] <= 1e-5, row
 print("BENCH_rp_speedup.json OK:", len(arms), "measured row(s),",
       "sharded-fused + procedure-fused (fp32/bf16) arms present")
+EOF
+
+  echo "== smoke: examples/train_capsnet.py --smoke --routing fused (custom VJP) =="
+  PYTHONPATH="$ROOT/src" python "$ROOT/examples/train_capsnet.py" \
+    --smoke --routing fused --ckpt-dir "$SMOKE_DIR/capsnet_ckpt"
+
+  echo "== smoke: benchmarks.run --smoke --only train (JSON artifact) =="
+  PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only train
+  python - <<'EOF'
+import json
+
+# STRICT loader: a NaN loss or gradient delta must fail CI, not serialize.
+def _reject(name):
+    raise AssertionError(f"non-finite constant {name} in BENCH_train.json")
+
+d = json.loads(open("BENCH_train.json").read(), parse_constant=_reject)
+for key in ("bench", "smoke", "config", "provenance", "arms", "resolved",
+            "grad_parity", "dma_model", "residual_model"):
+    assert key in d, f"BENCH_train.json missing {key!r}"
+assert d["bench"] == "train"
+
+# the gate: fused backward must match jnp autodiff on the full param tree
+gp = d["grad_parity"]
+assert gp["fused_pass"] is True, gp
+assert gp["bf16_pass"] is True, gp
+assert gp["fused_max_abs_param_grad_delta"] <= gp["fused_tol"] == 1e-4, gp
+assert gp["bf16_max_abs_param_grad_delta"] <= gp["bf16_tol"] == 2e-2, gp
+
+for arm in ("jnp", "jnp_dp", "fused", "fused_bf16"):
+    s = d["arms"][arm]
+    assert s["median_s"] > 0, (arm, s)
+    assert s["loss_decreased"] is True, (arm, s)
+    # interpret-mode (CPU) pallas arms must be flagged modeled_only so
+    # their wall-clock is never read as a hardware regression
+    if arm.startswith("fused") and d["provenance"]["pallas_interpret"]:
+        assert s["modeled_only"] is True, (arm, s)
+assert d["resolved"]["fused"]["fusion"] == "procedure", d["resolved"]
+assert d["resolved"]["fused"]["differentiable"] is True, d["resolved"]
+assert d["resolved"]["jnp"]["differentiable"] is False, d["resolved"]
+
+bwd = d["dma_model"]["backward_fp32"]
+assert bwd["backward"] is True and bwd["total_bytes"] < bwd["naive_bytes"], bwd
+rm = d["residual_model"]
+assert rm["fused_residual_bytes"] < rm["unfused_residual_bytes"], rm
+print("BENCH_train.json OK (strict JSON): grad-parity gate",
+      f"fused={gp['fused_max_abs_param_grad_delta']:.2e}",
+      f"bf16={gp['bf16_max_abs_param_grad_delta']:.2e},",
+      len(d["arms"]), "arms, loss decreased in all")
 EOF
 
   echo "== smoke: repro.launch.serve_caps --smoke (continuous batching) =="

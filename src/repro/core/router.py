@@ -76,6 +76,18 @@ class RouterSpec(NamedTuple):
     stream_dtype: dtype û streams HBM→VMEM at on the pallas backend —
                "fp32" or "bf16" (fp32 in-kernel accumulation either way;
                bf16 halves the DMA bytes of the only large operand).
+    differentiable: the router will be differentiated (``jax.grad`` /
+               ``jax.vjp`` through it — DESIGN.md §Training).  The jnp
+               backend is differentiable by construction (plain autodiff,
+               the gradient reference).  On the pallas backend this routes
+               the 'dynamic' algorithm through the recompute-b custom VJP
+               of the procedure megakernel
+               (``dynamic_routing_procedure_train``); plans must be
+               shard-local (the stage-split form has no VJP — auto plans
+               resolve unsharded) and ``use_approx`` is rejected (the
+               §5.2.2 bit manipulations have no derivative).  When the
+               procedure form does not fit VMEM the router falls back to
+               jnp autodiff rather than a forward-only kernel.
     options:   algorithm-specific extras as a sorted (name, value) tuple,
                e.g. (("beta_a", 1.0),) for EM.  Use ``spec.option(name)``.
     """
@@ -86,6 +98,7 @@ class RouterSpec(NamedTuple):
     options: Tuple[Tuple[str, Any], ...] = ()
     fusion: str = "auto"
     stream_dtype: str = "fp32"
+    differentiable: bool = False
 
     def option(self, name: str, default: Any = None) -> Any:
         for k, v in self.options:
@@ -158,6 +171,24 @@ def _pallas_interpret_mode() -> bool:
 
 def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
     (u_hat,) = args
+    if spec.backend == "pallas" and spec.differentiable:
+        # DESIGN.md §Training: grads flow through the recompute-b custom
+        # VJP of the procedure megakernel.  _validate already rejected
+        # sharded/pipelined plans and use_approx; the only remaining
+        # resolution is the VMEM fit — when the procedure form does not
+        # fit, fall back to jnp autodiff (the gradient reference) instead
+        # of a forward-only kernel that would fail under jax.grad.
+        from repro.kernels.routing import ops as routing_ops
+        form = routing_ops.resolve_fusion(spec.fusion, jnp.shape(u_hat),
+                                          spec.stream_dtype, sharded=False)
+        if form == "procedure":
+            return routing_ops.dynamic_routing_procedure_train(
+                u_hat, iterations=spec.iterations,
+                use_approx=spec.use_approx, stream_dtype=spec.stream_dtype,
+                interpret=_pallas_interpret_mode())
+        cfg = routing_lib.RoutingConfig(
+            iterations=spec.iterations, use_approx=spec.use_approx)
+        return routing_lib.dynamic_routing(u_hat, cfg)
     if spec.backend == "pallas":
         from repro.kernels.routing import ops as routing_ops
         form = routing_ops.resolve_fusion(spec.fusion, jnp.shape(u_hat),
@@ -388,17 +419,25 @@ class ResolvedPlan(tuple):
                   kernel form a pallas-backend router will run (DESIGN.md
                   §Procedure-fused); None for the jnp backend.
     stream_dtype: "fp32" | "bf16" û streaming dtype; None for jnp.
+    differentiable: True iff execution runs the fused procedure kernel
+                  through its recompute-b custom VJP (DESIGN.md §Training)
+                  — i.e. ``jax.grad`` hits the backward megakernel.  False
+                  for the jnp backend (plain autodiff, no fused backward)
+                  and for forward-only pallas execution.
     """
 
-    def __new__(cls, axes=(), fusion=None, stream_dtype=None):
+    def __new__(cls, axes=(), fusion=None, stream_dtype=None,
+                differentiable=False):
         self = super().__new__(cls, tuple(axes))
         self.fusion = fusion
         self.stream_dtype = stream_dtype
+        self.differentiable = differentiable
         return self
 
     def __repr__(self):
         return (f"ResolvedPlan(axes={tuple(self)}, fusion={self.fusion!r}, "
-                f"stream_dtype={self.stream_dtype!r})")
+                f"stream_dtype={self.stream_dtype!r}, "
+                f"differentiable={self.differentiable!r})")
 
 
 class Router:
@@ -434,27 +473,41 @@ class Router:
         return ResolvedPlan(axes, *self._resolve_fusion(axes, shapes))
 
     def _resolve_fusion(self, axes, shapes):
-        """(fusion, stream_dtype) the pallas backend will execute with —
-        the same ``resolve_fusion`` the run path calls, so the report can
-        never drift from execution.  jnp backend: (None, None); a no-arg
-        ``resolve()`` (historically legal for static plans) reports None
-        for fusion when the "auto" fit check would need the votes shape."""
+        """(fusion, stream_dtype, differentiable) the pallas backend will
+        execute with — the same ``resolve_fusion`` the run path calls, so
+        the report can never drift from execution.  jnp backend:
+        (None, None, False); a no-arg ``resolve()`` (historically legal for
+        static plans) reports None for fusion when the "auto" fit check
+        would need the votes shape."""
         if self.spec.backend != "pallas":
-            return None, None
+            return None, None, False
         if self.spec.algorithm != "dynamic":
-            return "stage_split", "fp32"   # EM: stage-split is the only form
+            # EM: stage-split is the only form
+            return "stage_split", "fp32", False
         if not shapes and not axes and self.spec.fusion == "auto":
-            return None, self.spec.stream_dtype
+            return None, self.spec.stream_dtype, False
         from repro.kernels.routing import ops as routing_ops
         form = routing_ops.resolve_fusion(self.spec.fusion,
                                           shapes[0] if shapes else None,
                                           self.spec.stream_dtype,
                                           sharded=bool(axes))
-        return form, self.spec.stream_dtype
+        if self.spec.differentiable:
+            # mirrors _dynamic_run's differentiable dispatch: the custom
+            # VJP exists for the procedure form only; anything else falls
+            # back to jnp autodiff (reported as the jnp triple).
+            if form == "procedure" and not axes:
+                return "procedure", self.spec.stream_dtype, True
+            return None, None, False
+        return form, self.spec.stream_dtype, False
 
     def _resolve_shapes(self, shapes: tuple) -> Tuple[Tuple[str, str], ...]:
         if not self.plan.auto:
             return tuple(self.plan.axes)
+        if self.spec.differentiable and self.spec.backend == "pallas":
+            # differentiable auto plans resolve shard-local: the §5.1.2
+            # planner's sharded pick would force the stage-split form,
+            # which has no custom VJP (DESIGN.md §Training)
+            return ()
         return plan_axes(self.spec, self.plan, shapes)
 
     def _hidden_struct(self, micro) -> jax.ShapeDtypeStruct:
@@ -623,6 +676,7 @@ class Router:
                 f"backend={self.spec.backend!r}, "
                 f"fusion={self.spec.fusion!r}, "
                 f"stream_dtype={self.spec.stream_dtype!r}, "
+                f"differentiable={self.spec.differentiable!r}, "
                 f"plan={'auto' if self.plan.auto else self.plan.axes}, "
                 f"pipeline={self.plan.pipeline!r})")
 
@@ -663,6 +717,34 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             "fusion='procedure' is shard-local (the megakernel keeps b/v/s "
             "in VMEM across iterations and cannot surface for the Table-2 "
             "psums); use fusion='auto' or 'iteration' with sharded plans")
+    if spec.differentiable and spec.backend == "pallas":
+        # DESIGN.md §Training: the recompute-b custom VJP exists for the
+        # 'dynamic' procedure megakernel only
+        if algo.name != "dynamic":
+            raise ValueError(
+                "differentiable=True on the pallas backend requires the "
+                "'dynamic' algorithm — only the procedure megakernel has a "
+                "custom VJP; use backend='jnp' for differentiable "
+                f"{algo.name!r} routing")
+        if spec.use_approx:
+            raise ValueError(
+                "differentiable=True requires use_approx=False: the §5.2.2 "
+                "bit-manipulation approximations have no derivative "
+                "(bitcast is not differentiable); train exact, serve "
+                "approx")
+        if spec.fusion == "iteration":
+            raise ValueError(
+                "fusion='iteration' has no custom VJP; the differentiable "
+                "fused form is the procedure megakernel — use "
+                "fusion='auto' or 'procedure' with differentiable=True")
+        if plan.axes or plan.pipeline is not None:
+            raise ValueError(
+                "differentiable pallas routing is shard-local: the "
+                "stage-split sharded/pipelined forms have no custom VJP "
+                "(the Table-2 psums would need their own transpose rules); "
+                "train with backend='jnp' under sharded/pipelined plans, "
+                "or use plan=None/'auto' (auto resolves unsharded when "
+                "differentiable)")
     bad = [d for d, _ in plan.axes if d not in algo.sharded_dims]
     if bad:
         raise ValueError(

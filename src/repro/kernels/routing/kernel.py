@@ -278,6 +278,209 @@ def routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# Whole-procedure backward megakernel (DESIGN.md §Training)
+# ---------------------------------------------------------------------------
+# Recompute-b backward: the forward saves ONLY û (and the incoming cotangent
+# ∂v) — none of the per-iteration intermediates (b, c, s, v) spill to HBM as
+# autodiff residuals.  The backward is one pallas_call whose grid prepends a
+# replay phase to a reverse phase:
+#
+#     grid = (2·iterations, n_l_tiles)
+#       rows 0..T-1   REPLAY  — re-run the forward schedule from VMEM,
+#                               snapshotting the *small* per-iteration state
+#                               (c_t (L,H), s_t and v_{t-1} (B,H,C)) into
+#                               VMEM scratch,
+#       rows T..2T-1  REVERSE — walk iterations T-1..0 carrying the cotangent
+#                               ∂v (B,H,C) and the accumulated logit
+#                               cotangent ∂b (L,H), both fp32.
+#
+# Per reverse iteration t (derived from the lazy-update schedule; verified
+# against jnp autodiff in tests/_gradcheck.py users):
+#
+#     gs   = squash_vjp(s_t, gv)                                  (B,H,C)
+#     gc   = Σ_{k,c} û·gs                                         (L,H)
+#     gb  += c_t ⊙ (gc − Σ_H c_t·gc)      softmax_H vjp, Eq.5     (L,H)
+#     ∂û  += c_t ⊗ gs  +  gb ⊗ v_{t-1}    Eq.2 + deferred Eq.4 terms
+#     gv   = Σ_l gb·û                     carry to iteration t-1  (B,H,C)
+#
+# At t = 0 the v_{-1} = 0 start kills the Eq.4 term and b₀ = 0 receives no
+# input gradient, so ∂û is complete after the t = 0 reverse row.  ∂û is
+# accumulated in fp32 from the per-iteration snapshots and written to HBM
+# exactly once per L-tile (at the final grid row), at the û stream dtype —
+# the backward's DMA bill is 2T û-streams in + 1 û-sized ∂û out (see
+# ops.py::dma_bytes_per_call(backward=True)).
+
+
+def _routing_procedure_bwd_kernel(u_ref, g_ref, du_ref,
+                                  b_scr, v_scr, s_scr,
+                                  c_all, s_all, vp_all, gs_all, gb_all, *,
+                                  h: int, c_dim: int, l_tile: int,
+                                  n_l_tiles: int, iterations: int,
+                                  use_approx: bool):
+    """One grid step = one (phase-row, L-tile) cell.
+
+    u_ref:  (B, L_t, H·C) lane-packed û tile (streamed once per grid row)
+    g_ref:  (B, H, C) incoming cotangent ∂v (same block every step)
+    du_ref: (B, L_t, H·C) ∂û tile, written once at the final grid row
+
+    Scratch (all fp32, VMEM-resident across the whole grid):
+    b_scr:  (L, H)    replay: logits b      | reverse: accumulated ∂b
+    v_scr:  (B, H, C) replay: previous v    | reverse: carried ∂v
+    s_scr:  (B, H, C) replay: vote-sum s    | reverse: next ∂v accumulator
+    c_all:  (T, L, H)    per-iteration coupling coefficients c_t
+    s_all:  (T, B, H, C) per-iteration pre-squash vote sums s_t
+    vp_all: (T, B, H, C) per-iteration previous v (v_{t-1})
+    gs_all: (T, B, H, C) per-iteration ∂s (squash vjp of the carried ∂v)
+    gb_all: (T, L, H)    snapshot of accumulated ∂b after folding row t
+
+    The phase row index is compared against *Python* constants only
+    (static unroll via ``pl.when(row == k)``) so every scratch slot index
+    is a static int — no dynamically-indexed VMEM addressing.
+    """
+    row = pl.program_id(0)
+    j = pl.program_id(1)
+    u = u_ref[...].astype(jnp.float32)           # fp32 accumulation
+    batch = u.shape[0]
+    u = u.reshape(batch, l_tile, h, c_dim)       # unpack lanes -> (H, C)
+    rows = pl.ds(j * l_tile, l_tile)
+
+    def _replay(t: int):
+        """Forward iteration t, mirroring _routing_procedure_kernel but
+        snapshotting (v_{t-1}, c_t, s_t) into the per-iteration scratch."""
+        if t == 0:
+            @pl.when(j == 0)
+            def _reset():
+                b_scr[...] = jnp.zeros_like(b_scr)
+                v_scr[...] = jnp.zeros_like(v_scr)
+
+        @pl.when(j == 0)
+        def _snap_vprev():
+            vp_all[t] = v_scr[...]
+
+        v_prev = v_scr[...]
+        db = jnp.sum(u * v_prev[:, None], axis=(0, 3))       # (L_t, H)
+        b_new = b_scr[rows, :] + db
+        b_scr[rows, :] = b_new
+        coup = _softmax_h_inkernel(b_new, use_approx)        # (L_t, H)
+        c_all[t, rows, :] = coup
+        s_part = jnp.sum(u * coup[None, :, :, None], axis=1)
+
+        @pl.when(j == 0)
+        def _init():
+            s_scr[...] = s_part
+
+        @pl.when(j != 0)
+        def _acc():
+            s_scr[...] += s_part
+
+        @pl.when(j == n_l_tiles - 1)
+        def _finish_iteration():
+            s_all[t] = s_scr[...]
+            v_scr[...] = _squash_inkernel(s_scr[...], use_approx)
+
+    def _reverse(t: int):
+        """Backward through forward iteration t (t runs T-1 .. 0)."""
+        @pl.when(j == 0)
+        def _start_iteration():
+            if t == iterations - 1:
+                # seed the reverse sweep: ∂v := incoming cotangent, ∂b := 0
+                v_scr[...] = g_ref[...].astype(jnp.float32)
+                b_scr[...] = jnp.zeros_like(b_scr)
+            # Eq.3 transpose — local jvp-transpose of the *exact* squash at
+            # the replayed s_t (use_approx mode gets the exact-surrogate
+            # gradient; the Router refuses differentiable+approx anyway).
+            _, sq_vjp = jax.vjp(lambda x: _squash_inkernel(x, False),
+                                s_all[t])
+            gs_all[t] = sq_vjp(v_scr[...])[0]
+            s_scr[...] = jnp.zeros_like(s_scr)   # next ∂v accumulator
+
+        gs = gs_all[t]                                       # (B, H, C)
+        # Eq.2 transpose into the logits: gc[l,h] = Σ_{k,c} û·gs
+        gc = jnp.sum(u * gs[:, None], axis=(0, 3))           # (L_t, H)
+        coup = c_all[t, rows, :]
+        # Eq.5 softmax_H vjp, folded into the running ∂b
+        gb = b_scr[rows, :] + coup * (
+            gc - jnp.sum(coup * gc, axis=-1, keepdims=True))
+        b_scr[rows, :] = gb
+        if t > 0:
+            gb_all[t, rows, :] = gb
+        # deferred-Eq.4 transpose: carry ∂v_{t-1}[k,h,c] += Σ_l gb·û
+        s_scr[...] += jnp.sum(u * gb[None, :, :, None], axis=1)
+
+        @pl.when(j == n_l_tiles - 1)
+        def _finish_iteration():
+            v_scr[...] = s_scr[...]              # becomes ∂v for row t-1
+
+        if t == 0:
+            # ∂û for this L-tile, summed over all iterations from the
+            # snapshots:  ∂û = Σ_t [ c_t ⊗ gs_t + gb_t ⊗ v_{t-1} ]
+            # (the t = 0 Eq.4 term vanishes: v_{-1} = 0).
+            acc = coup[None, :, :, None] * gs[:, None]
+            for tp in range(1, iterations):
+                acc += (c_all[tp, rows, :][None, :, :, None]
+                        * gs_all[tp][:, None])
+                acc += (gb_all[tp, rows, :][None, :, :, None]
+                        * vp_all[tp][:, None])
+            du_ref[...] = acc.reshape(batch, l_tile,
+                                      h * c_dim).astype(du_ref.dtype)
+
+    for t in range(iterations):                  # replay rows 0..T-1
+        pl.when(row == t)(functools.partial(_replay, t))
+    for t in range(iterations - 1, -1, -1):      # reverse rows T..2T-1
+        pl.when(row == 2 * iterations - 1 - t)(functools.partial(_reverse, t))
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "l_tile",
+                                             "use_approx", "interpret"))
+def routing_procedure_bwd(u_hat: jax.Array, g: jax.Array, *,
+                          iterations: int = 3, l_tile: int = 128,
+                          use_approx: bool = False,
+                          interpret: bool = True) -> jax.Array:
+    """Backward of :func:`routing_procedure_fused`: (û (B,L,H,C), ∂v (B,H,C))
+    -> ∂û (B,L,H,C) at û's (stream) dtype.
+
+    ONE pallas_call, grid (2·iterations, L/l_tile): replay rows reconstruct
+    the per-iteration b/c/s/v from VMEM, reverse rows accumulate ∂û in fp32
+    (see the module-level derivation above _routing_procedure_bwd_kernel).
+    VMEM fixed cost beyond the forward's: (2T+1)·L·H·4 + 3(T+1)·B·H·C·4
+    bytes of per-iteration snapshots — ops.py::procedure_train_l_tile
+    subtracts it when auto-sizing the tile.
+    """
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    if u_hat.dtype not in (jnp.float32, jnp.bfloat16):
+        u_hat = u_hat.astype(jnp.float32)
+    u_packed = u_hat.reshape(B, L, H * C)        # lane-packed stream layout
+    T = iterations
+    kernel = functools.partial(
+        _routing_procedure_bwd_kernel, h=H, c_dim=C, l_tile=l_tile,
+        n_l_tiles=L // l_tile, iterations=T, use_approx=use_approx)
+    du = pl.pallas_call(
+        kernel,
+        grid=(2 * T, L // l_tile),
+        in_specs=[
+            pl.BlockSpec((B, l_tile, H * C), lambda it, j: (0, j, 0)),
+            pl.BlockSpec((B, H, C), lambda it, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, l_tile, H * C), lambda it, j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L, H * C), u_hat.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((L, H), jnp.float32),         # b     | ∂b
+            pltpu.VMEM((B, H, C), jnp.float32),      # v     | ∂v carry
+            pltpu.VMEM((B, H, C), jnp.float32),      # s     | ∂v accum
+            pltpu.VMEM((T, L, H), jnp.float32),      # c_t snapshots
+            pltpu.VMEM((T, B, H, C), jnp.float32),   # s_t snapshots
+            pltpu.VMEM((T, B, H, C), jnp.float32),   # v_{t-1} snapshots
+            pltpu.VMEM((T, B, H, C), jnp.float32),   # ∂s_t snapshots
+            pltpu.VMEM((T, L, H), jnp.float32),      # ∂b snapshots
+        ],
+        interpret=interpret,
+    )(u_packed, g.astype(jnp.float32))
+    return du.reshape(B, L, H, C)
+
+
+# ---------------------------------------------------------------------------
 # Stage-split kernels — sharded-fused routing (DESIGN.md §Sharded-fused)
 # ---------------------------------------------------------------------------
 # The single-pass lazy-update kernel above assumes every Table-2 aggregation

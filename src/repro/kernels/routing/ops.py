@@ -38,6 +38,7 @@ from repro.core import routing as routing_lib
 from repro.kernels.routing import ref
 from repro.kernels.routing.kernel import (em_stage_estep, em_stage_stats,
                                           routing_iteration_fused,
+                                          routing_procedure_bwd,
                                           routing_procedure_fused,
                                           routing_stage_update,
                                           routing_stage_update_fold,
@@ -110,6 +111,37 @@ def procedure_l_tile(B: int, L: int, H: int, C: int,
     return pick_l_tile(L, budget, B * H * C * _stream_itemsize(stream_dtype))
 
 
+def procedure_bwd_vmem_bytes(B: int, L: int, H: int, C: int, l_tile: int,
+                             iterations: int = 3,
+                             stream_dtype: str = "fp32") -> int:
+    """VMEM working set of the backward megakernel
+    (kernel.py::routing_procedure_bwd): double-buffered û *and* ∂û stream
+    blocks, the b/v/s scratch (reused as ∂b / ∂v carry / ∂v accumulator in
+    the reverse phase) plus the per-iteration snapshots — 2T logit-sized
+    (c_t, ∂b_t) and 3T vote-sized (s_t, v_{t-1}, ∂s_t) — and the (B,H,C)
+    cotangent block."""
+    u_blk = B * l_tile * H * C * _stream_itemsize(stream_dtype)
+    T = iterations
+    return (4 * u_blk                            # û + ∂û, double-buffered
+            + (2 * T + 1) * L * H * 4            # b/∂b + c_t + ∂b_t snaps
+            + (3 * T + 3) * B * H * C * 4)       # v,s,∂g + s_t/v_{t-1}/∂s_t
+
+
+def procedure_train_l_tile(B: int, L: int, H: int, C: int,
+                           iterations: int = 3,
+                           stream_dtype: str = "fp32") -> int:
+    """l_tile for the *differentiable* megakernel: like procedure_l_tile
+    but the fixed VMEM cost is the backward's (per-iteration snapshots
+    included) and the tile budget splits four ways (û and ∂û blocks, each
+    double-buffered) — the forward reuses the same tile so fwd and bwd
+    share one stream layout."""
+    T = iterations
+    fixed = (2 * T + 1) * L * H * 4 + (3 * T + 3) * B * H * C * 4
+    budget = min(_U_TILE_BUDGET,
+                 max(0, PROCEDURE_VMEM_BUDGET - fixed) // 4)
+    return pick_l_tile(L, budget, B * H * C * _stream_itemsize(stream_dtype))
+
+
 def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
                    sharded: bool = False) -> str:
     """Resolve a RouterSpec ``fusion`` knob to the concrete kernel form.
@@ -146,7 +178,8 @@ def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
 def dma_bytes_per_call(B: int, L: int, H: int, C: int,
                        iterations: int = 3, *, form: str = "iteration",
                        stream_dtype: str = "fp32",
-                       fold: bool = False) -> dict:
+                       fold: bool = False,
+                       backward: bool = False) -> dict:
     """HBM<->VMEM traffic per routing call, derived from the BlockSpecs of
     each kernel form (kernel.py):
 
@@ -176,11 +209,42 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
     The naive jnp path (ref.py) touches û twice per iteration (Eq.2 + Eq.4
     einsums) plus materialised intermediates — measured ~5x the fused bound
     on the pod dry-run (EXPERIMENTS.md §Perf routing cell).
+
+    ``backward=True`` models the recompute-b backward megakernel
+    (DESIGN.md §Training) — defined for ``form="procedure"`` only (the
+    other forms have no custom VJP).  û streams 2T times (T replay + T
+    reverse rows), a û-sized ∂û is written once at the stream dtype
+    (``du_stream_bytes``) and the only other traffic is the (B,H,C) fp32
+    cotangent read — every per-iteration residual (b, c, s, v and their
+    cotangents) stays in VMEM.  ``naive_bytes`` then models unfused jnp
+    autodiff of the same procedure: û re-read twice per iteration by the
+    einsum transposes, a û-sized ∂û accumulator read+written per
+    iteration, and the per-iteration b/c/s/v residuals spilled forward
+    and re-read backward.
     """
     f = 4  # fp32: logits / vote-sum / output blocks are always fp32
     u = B * L * H * C * _stream_itemsize(stream_dtype)
     bh = L * H * f
     vhc = B * H * C * f
+    u_f32 = B * L * H * C * 4
+    if backward:
+        if form != "procedure":
+            raise ValueError(
+                "backward=True models the recompute-b VJP of the procedure "
+                f"megakernel only (form={form!r} has no custom VJP)")
+        return {
+            "form": form,
+            "fold": fold,
+            "stream_dtype": stream_dtype,
+            "backward": True,
+            "u_hat_stream_bytes": 2 * iterations * u,
+            "du_stream_bytes": u,
+            "roundtrip_bytes": vhc,
+            "total_bytes": 2 * iterations * u + u + vhc,
+            "u_hat_bytes": u_f32,
+            "naive_bytes": iterations * (2 * u_f32 + 2 * u_f32
+                                         + 2 * (2 * bh + 2 * vhc)),
+        }
     if form == "iteration":
         u_stream = iterations * u
         roundtrip = iterations * (2 * bh + 4 * vhc)
@@ -196,11 +260,11 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
     if fold and form != "stage_split":
         raise ValueError("fold=True models the softmax-folded STAGE 2 of "
                          f"the stage_split form only; got form={form!r}")
-    u_f32 = B * L * H * C * 4
     return {
         "form": form,
         "fold": fold,
         "stream_dtype": stream_dtype,
+        "backward": False,
         "u_hat_stream_bytes": u_stream,
         "roundtrip_bytes": roundtrip,
         "total_bytes": u_stream + roundtrip,
@@ -259,6 +323,74 @@ def dynamic_routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
     return routing_procedure_fused(u_hat, iterations=iterations,
                                    l_tile=l_tile, use_approx=use_approx,
                                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable procedure megakernel (DESIGN.md §Training)
+# ---------------------------------------------------------------------------
+# The recompute-b custom VJP: the forward is routing_procedure_fused
+# unchanged; the only residual it saves is û itself (the backward replays
+# the cheap routing loop from VMEM — kernel.py::routing_procedure_bwd — so
+# none of the per-iteration b/c/s/v ever spill to HBM as autodiff
+# residuals).  ∂û comes back at û's stream dtype with fp32 in-kernel
+# accumulation; the differentiable stream-dtype cast in
+# dynamic_routing_procedure_train transposes it back to the caller's fp32.
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _procedure_train_core(u_hat, iterations, l_tile, use_approx, interpret):
+    return routing_procedure_fused(u_hat, iterations=iterations,
+                                   l_tile=l_tile, use_approx=use_approx,
+                                   interpret=interpret)
+
+
+def _procedure_train_fwd(u_hat, iterations, l_tile, use_approx, interpret):
+    v = routing_procedure_fused(u_hat, iterations=iterations, l_tile=l_tile,
+                                use_approx=use_approx, interpret=interpret)
+    return v, u_hat      # recompute-b: û is the ONLY saved residual
+
+
+def _procedure_train_bwd(iterations, l_tile, use_approx, interpret,
+                         u_hat, g):
+    du = routing_procedure_bwd(u_hat, g, iterations=iterations,
+                               l_tile=l_tile, use_approx=use_approx,
+                               interpret=interpret)
+    return (du,)
+
+
+_procedure_train_core.defvjp(_procedure_train_fwd, _procedure_train_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
+                                             "l_tile", "stream_dtype",
+                                             "interpret"))
+def dynamic_routing_procedure_train(u_hat: jax.Array, *, iterations: int = 3,
+                                    use_approx: bool = False,
+                                    l_tile: int | None = None,
+                                    stream_dtype: str = "fp32",
+                                    interpret: bool = True) -> jax.Array:
+    """Differentiable whole-procedure megakernel (DESIGN.md §Training).
+
+    Same contract as :func:`dynamic_routing_procedure_fused` — u_hat
+    (B, L, H, C) -> v (B, H, C) — but ``jax.grad`` flows through a custom
+    VJP whose backward is a second megakernel replaying the routing loop
+    from VMEM (recompute-b), not jnp autodiff.  ``stream_dtype`` applies to
+    both directions: û streams at it in the 2T backward rows and ∂û is
+    written once at it (fp32 accumulation throughout).  The tile is sized
+    by :func:`procedure_train_l_tile` so forward and backward share one
+    stream layout that fits the backward's larger VMEM working set.
+
+    ``use_approx=True`` is accepted for forward parity but its gradient is
+    the exact-squash/softmax surrogate (the §5.2.2 bit-manipulation
+    approximations have no derivative); the Router refuses
+    ``differentiable=True`` + ``use_approx`` for this reason.
+    """
+    u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
+    B, L, H, C = u_hat.shape
+    if l_tile is None:
+        l_tile = procedure_train_l_tile(B, L, H, C, iterations, stream_dtype)
+    return _procedure_train_core(u_hat, iterations, l_tile, use_approx,
+                                 interpret)
 
 
 # ---------------------------------------------------------------------------

@@ -23,7 +23,7 @@ from repro.runtime import compression
 
 
 def make_train_step(cfg: lm.ArchConfig, rules: AxisRules = NO_RULES,
-                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    opt_cfg: Optional[AdamWConfig] = None,
                     num_microbatches: int = 1,
                     max_grad_norm: float = 1.0,
                     total_steps: int = 10_000, warmup: int = 100,
@@ -31,7 +31,13 @@ def make_train_step(cfg: lm.ArchConfig, rules: AxisRules = NO_RULES,
     """Build the train step.  Batch layout:
        num_microbatches == 1: {tokens (B,S), labels (B,S), ...}
        num_microbatches  > 1: {tokens (n,mb,S), ...} — scanned.
+
+    opt_cfg: None -> a fresh ``AdamWConfig()`` per call.  (Never a shared
+    default instance — the PR-5 shared-``ServeConfig`` bug class: a single
+    module-level default object leaking across independently built steps.)
     """
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig()
     # Gradients (and the accumulation buffer) must carry the parameters'
     # sharding: without the constraint XLA is free to replicate the fp32
     # accumulator, which costs param_count*4 bytes *per device* (observed
@@ -87,7 +93,8 @@ def make_train_step(cfg: lm.ArchConfig, rules: AxisRules = NO_RULES,
             return params, opt_state, out_metrics, error_fb
         return params, opt_state, out_metrics
 
-    return train_step
+    train_step.opt_cfg = opt_cfg     # introspection: which config this
+    return train_step                # step was built with (tests/benches)
 
 
 def init_train_state(cfg: lm.ArchConfig, key):
@@ -100,20 +107,49 @@ def init_train_state(cfg: lm.ArchConfig, key):
 # ---------------------------------------------------------------------------
 
 def make_capsnet_train_step(caps_cfg, spec=None, plan=None,
-                            opt_cfg: AdamWConfig = AdamWConfig(),
+                            opt_cfg: Optional[AdamWConfig] = None,
                             max_grad_norm: float = 1.0,
                             total_steps: int = 10_000, warmup: int = 100
                             ) -> Callable:
     """Build a jit-able CapsNet train step over the unified Router API.
 
-    spec/plan go to ``core.router.build_router`` (None -> exact unsharded
-    dynamic routing at ``caps_cfg.routing_iters``); the same AdamW + clip +
-    warmup-cosine machinery as the LM step.  Returned signature:
+    spec/plan go to ``core.router.build_router`` with
+    ``differentiable=True`` stamped on the spec (DESIGN.md §Training) —
+    grads are about to flow through the router, so the pallas backend must
+    resolve to the fused form that HAS a backward (the procedure
+    megakernel's recompute-b custom VJP) rather than a forward-only
+    kernel:
+
+      spec=None, plan=None      exact jnp routing (the autodiff reference)
+      spec=None, plan="auto"    pallas procedure megakernel + custom VJP
+                                (auto plans resolve shard-local when
+                                differentiable)
+      RouterSpec(...)           as given, ``_replace(differentiable=True)``
+      prebuilt Router           used as-is (plan must be None); the caller
+                                owns its differentiability
+
+    opt_cfg: None -> a fresh ``AdamWConfig()`` per call (never a shared
+    default instance).  The same AdamW + clip + warmup-cosine machinery as
+    the LM step.  Returned signature:
         (params, opt_state, images, labels) -> (params, opt_state, metrics)
+    The built step exposes ``train_step.router`` / ``train_step.opt_cfg``
+    so callers can inspect the resolved execution (e.g.
+    ``train_step.router.resolve(votes).differentiable``).
     """
     from repro.core import router as router_lib
     from repro.models import capsnet
 
+    if opt_cfg is None:
+        opt_cfg = AdamWConfig()
+    if spec is None:
+        # plan=None keeps the historical jnp default; any actual plan
+        # (auto or explicit) asks for the pallas backend and therefore the
+        # differentiable fused resolution
+        spec = router_lib.RouterSpec(
+            backend="jnp" if plan is None else "pallas",
+            iterations=caps_cfg.routing_iters, differentiable=True)
+    elif isinstance(spec, router_lib.RouterSpec):
+        spec = spec._replace(differentiable=True)
     router = router_lib.as_router(
         spec, plan, default_iterations=caps_cfg.routing_iters)
 
@@ -133,4 +169,6 @@ def make_capsnet_train_step(caps_cfg, spec=None, plan=None,
         return params, opt_state, {"loss": loss, "grad_norm": gnorm,
                                    "lr_scale": lr_scale, **metrics}
 
-    return train_step
+    train_step.router = router       # resolved execution is inspectable
+    train_step.opt_cfg = opt_cfg     # (and regression-testable: no shared
+    return train_step                # default config across built steps)

@@ -1,0 +1,88 @@
+"""Reusable gradient-parity helpers (DESIGN.md §Training).
+
+Every kernel that grows a custom VJP proves its backward here, two ways:
+
+* ``check_vjp_parity`` — the kernel's VJP against a trusted reference
+  implementation differentiated by plain jnp autodiff, same cotangent,
+  per-element absolute tolerance.  The tolerances are per stream dtype
+  (``GRAD_ATOL``): fp32 backward vs fp32 autodiff agree to 1e-4; a bf16
+  û stream rounds the *primal* before both paths, so the remaining
+  delta is accumulation-order noise bounded by 2e-2.
+* ``check_grad_finite_difference`` — reference-free directional probes:
+  central differences of a random scalarization against the analytic
+  directional derivative <grad, d>.  Catches the failure mode parity
+  checks can't: both implementations wrong the same way.
+
+Import from tests as ``from _gradcheck import ...`` (the tests directory
+is rootdir-relative on sys.path, same mechanism as _hypothesis_compat).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# per-element |Δgrad| tolerance by û stream dtype (ISSUE/DESIGN §Training)
+GRAD_ATOL = {"fp32": 1e-4, "bf16": 2e-2}
+
+
+def grad_tol(stream_dtype: str) -> float:
+    return GRAD_ATOL[stream_dtype]
+
+
+def _unit_probe(key, shape, dtype=jnp.float32):
+    d = jax.random.normal(key, shape, dtype)
+    return d / jnp.sqrt(jnp.sum(d.astype(jnp.float32) ** 2))
+
+
+def random_cotangent(f, primal, seed: int = 0):
+    """A fixed random cotangent matching f's output shape (fp32)."""
+    out = jax.eval_shape(f, primal)
+    return jax.random.normal(jax.random.PRNGKey(seed), out.shape,
+                             jnp.float32)
+
+
+def check_vjp_parity(f, f_ref, primal, *, atol, cotangent=None,
+                     rtol: float = 0.0, seed: int = 0):
+    """Pull one cotangent back through ``f`` (custom VJP) and ``f_ref``
+    (autodiff reference); assert per-element closeness.  Returns both
+    gradients (fp32) for further checks."""
+    if cotangent is None:
+        cotangent = random_cotangent(f_ref, primal, seed=seed)
+    out, f_vjp = jax.vjp(f, primal)
+    out_ref, ref_vjp = jax.vjp(f_ref, primal)
+    g = f_vjp(cotangent.astype(out.dtype))[0].astype(jnp.float32)
+    g_ref = ref_vjp(cotangent.astype(out_ref.dtype))[0].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref),
+                               rtol=rtol, atol=atol)
+    return g, g_ref
+
+
+def check_grad_finite_difference(f, primal, *, eps: float = 1e-2,
+                                 probes: int = 3, rtol: float = 5e-2,
+                                 atol: float = 5e-3, seed: int = 0):
+    """Central-difference probe of ``f``'s gradient, no reference needed.
+
+    Scalarizes ``f`` with a fixed random cotangent w (loss = <f(x), w>),
+    takes its analytic gradient through f's VJP, then checks ``probes``
+    random unit directions d:  (loss(x+eps d) - loss(x-eps d)) / 2eps  ≈
+    <grad, d>.  fp32 arithmetic bounds the achievable agreement — eps and
+    the tolerances default to the plateau of the fp32 roundoff/truncation
+    trade-off, loose enough for O(1) losses, tight enough that a wrong
+    backward term (they are O(1) relative errors) cannot pass."""
+    primal = primal.astype(jnp.float32)
+    w = random_cotangent(f, primal, seed=seed + 7919)
+
+    def loss(x):
+        return jnp.vdot(f(x).astype(jnp.float32), w)
+
+    g = jax.grad(loss)(primal).astype(jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    for i in range(probes):
+        d = _unit_probe(jax.random.fold_in(key, i), primal.shape)
+        fd = (loss(primal + eps * d) - loss(primal - eps * d)) / (2 * eps)
+        analytic = jnp.vdot(g, d)
+        np.testing.assert_allclose(float(fd), float(analytic),
+                                   rtol=rtol, atol=atol,
+                                   err_msg=f"FD probe {i} disagrees with "
+                                           "the analytic directional "
+                                           "derivative")
+    return g

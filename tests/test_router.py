@@ -574,3 +574,138 @@ def test_capsnet_serve_and_train_entry_points(key):
     moved = any(bool(jnp.any(a != b)) for a, b in
                 zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
     assert moved
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused routing (DESIGN.md §Training)
+# ---------------------------------------------------------------------------
+
+
+def test_differentiable_router_grad_matches_jnp(key, u_hat):
+    """jax.grad through the differentiable pallas router (recompute-b
+    custom VJP) == jax.grad through the jnp-backend autodiff reference,
+    and resolve() reports the fused-differentiable execution."""
+    fused = build_router(RouterSpec(backend="pallas", differentiable=True))
+    ref = build_router(RouterSpec())
+    resolved = fused.resolve(u_hat)
+    assert resolved.fusion == "procedure" and resolved.differentiable
+    assert not ref.resolve(u_hat).differentiable
+    w = jax.random.normal(jax.random.fold_in(key, 9), (4, 8, 16))
+    g_f = jax.grad(lambda u: jnp.vdot(fused(u), w))(u_hat)
+    g_r = jax.grad(lambda u: jnp.vdot(ref(u), w))(u_hat)
+    np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_r), atol=1e-4)
+
+
+def test_differentiable_auto_plan_resolves_shard_local(u_hat):
+    """plan='auto' + differentiable resolves UNSHARDED procedure fusion
+    (the §5.1.2 planner's sharded pick would force the VJP-less
+    stage-split form), while the same auto plan without differentiable
+    keeps the planner's distribution choice."""
+    spec = RouterSpec(backend="pallas", differentiable=True)
+    resolved = build_router(spec, "auto").resolve(u_hat)
+    assert tuple(resolved) == ()
+    assert resolved.fusion == "procedure" and resolved.differentiable
+    fwd_only = build_router(RouterSpec(backend="pallas"), "auto")
+    assert not fwd_only.resolve(u_hat).differentiable
+
+
+def test_differentiable_validation_errors():
+    """The documented composition errors: sharded/pipelined plans,
+    use_approx, fusion='iteration', and non-dynamic algorithms have no
+    custom VJP."""
+    spec = RouterSpec(backend="pallas", differentiable=True)
+    mesh = compat.make_mesh((jax.device_count(),), ("x",))
+    with pytest.raises(ValueError, match="shard-local"):
+        build_router(spec, ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+    with pytest.raises(ValueError, match="no derivative"):
+        build_router(spec._replace(use_approx=True))
+    with pytest.raises(ValueError, match="no custom VJP"):
+        build_router(spec._replace(fusion="iteration"))
+    with pytest.raises(ValueError, match="'dynamic' algorithm"):
+        build_router(RouterSpec(algorithm="em", backend="pallas",
+                                differentiable=True))
+    # jnp backend is differentiable by construction: no restrictions
+    build_router(RouterSpec(differentiable=True),
+                 ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+
+
+def test_differentiable_vmem_fallback_is_jnp(monkeypatch):
+    """When the procedure form does not fit VMEM, the differentiable
+    router must fall back to jnp autodiff (reported as the jnp triple),
+    never to a forward-only kernel that would fail under jax.grad."""
+    from repro.kernels.routing import ops as rt_ops
+    monkeypatch.setattr(rt_ops, "PROCEDURE_VMEM_BUDGET", 1024)
+    router = build_router(RouterSpec(backend="pallas", differentiable=True))
+    u = jnp.ones((2, 64, 6, 8))
+    resolved = router.resolve(u)
+    assert resolved.fusion is None and not resolved.differentiable
+    g = jax.grad(lambda x: jnp.sum(router(x) ** 2))(u)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_capsnet_train_step_auto_plan_trains_fused(key):
+    """make_capsnet_train_step(plan='auto') resolves to the
+    fused-differentiable backend and one train step strictly decreases
+    the loss on its own batch."""
+    from repro.configs.caps_benchmarks import smoke_caps
+    from repro.models import capsnet
+    from repro.optim import AdamWConfig, adamw_init
+    from repro.runtime import train_loop
+    cfg = smoke_caps()
+    step = train_loop.make_capsnet_train_step(
+        cfg, plan="auto", opt_cfg=AdamWConfig(weight_decay=0.0),
+        warmup=1, total_steps=100)
+    assert step.router.spec.backend == "pallas"
+    assert step.router.spec.differentiable
+    votes_shape = (4, cfg.num_l_caps, cfg.num_h_caps, cfg.h_caps_dim)
+    resolved = step.router.resolve(jnp.zeros(votes_shape))
+    assert resolved.fusion == "procedure" and resolved.differentiable
+    assert tuple(resolved) == ()
+
+    params = capsnet.init_capsnet(key, cfg)
+    images = jax.random.uniform(jax.random.fold_in(key, 1),
+                                (4, cfg.image_hw, cfg.image_hw,
+                                 cfg.image_channels))
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (4,), 0,
+                                cfg.num_h_caps)
+    p1, _, metrics = jax.jit(step)(params, adamw_init(params), images,
+                                   labels)
+    loss_after = capsnet.loss_fn(p1, images, labels, cfg,
+                                 router=step.router)[0]
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(loss_after) < float(metrics["loss"])
+
+
+def test_capsnet_train_step_sharded_fused_raises():
+    """Explicit fused spec + sharded plan under grad: the documented
+    error, raised at build time (not a silent VJP-less composition)."""
+    from repro.configs.caps_benchmarks import smoke_caps
+    from repro.runtime import train_loop
+    mesh = compat.make_mesh((jax.device_count(),), ("x",))
+    with pytest.raises(ValueError, match="shard-local"):
+        train_loop.make_capsnet_train_step(
+            smoke_caps(), spec=RouterSpec(backend="pallas"),
+            plan=ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+
+
+def test_train_step_opt_cfg_isolation():
+    """Regression for the shared-mutable-default bug class (PR-5
+    ServeConfig): every default-built step gets a FRESH AdamWConfig; a
+    custom config on one build never leaks into another."""
+    import repro.configs as C
+    from repro.configs.caps_benchmarks import smoke_caps
+    from repro.optim import AdamWConfig
+    from repro.runtime import train_loop
+    cfg = smoke_caps()
+    s1 = train_loop.make_capsnet_train_step(cfg)
+    s2 = train_loop.make_capsnet_train_step(cfg,
+                                            opt_cfg=AdamWConfig(lr=9.0))
+    s3 = train_loop.make_capsnet_train_step(cfg)
+    assert s1.opt_cfg == AdamWConfig() == s3.opt_cfg
+    assert s2.opt_cfg.lr == 9.0 and s3.opt_cfg.lr != 9.0
+    lm_cfg = C.get_smoke_config("granite-3-2b")
+    t1 = train_loop.make_train_step(lm_cfg)
+    t2 = train_loop.make_train_step(lm_cfg, opt_cfg=AdamWConfig(lr=9.0))
+    t3 = train_loop.make_train_step(lm_cfg)
+    assert t1.opt_cfg == AdamWConfig() == t3.opt_cfg
+    assert t2.opt_cfg.lr == 9.0
