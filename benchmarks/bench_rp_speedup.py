@@ -59,7 +59,14 @@ NAIVE_TRAFFIC_FACTOR = 4.0
 FUSED_TRAFFIC_FACTOR = 1.0   # stream u_hat once (kernel design)
 
 # (name, B, L, H, C, iters) — smoke sizes for the CI artifact check
-SMOKE_SHAPES = [("smoke", 2, 64, 6, 8, 2)]
+# (iters=3 so the early-exit ladder can show eff < iters * n_l_tiles: the
+# first possible ‖Δb‖ freeze lands after iteration 1, saving work from
+# iteration 2 on)
+SMOKE_SHAPES = [("smoke", 2, 64, 6, 8, 3)]
+
+# ‖Δb‖∞ thresholds for the measured early-exit ladder (ascending; the
+# last rung is effectively ∞ — every tile freezes at its first check)
+EARLY_EXIT_EPS_LADDER = (1.0, 8.0, 64.0, 1e6)
 
 
 def _measure_shapes(batch: int):
@@ -79,11 +86,17 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
     * procedure-fusion eliminates the per-iteration (L,H)/(B,H,C)
       round-trips — only the final v write remains;
     * bf16 û streaming halves the stream bytes of the only large operand;
+    * int8 û streaming quarters them (per-tile scales are O(L/l_tile),
+      not modeled — DESIGN.md §Quantized-routing);
+    * the early-exit floor row models the analytic best case: every tile
+      frozen after iteration 1 -> û work fraction min(iters, 2)/iters
+      (each tile must stream twice before its first ‖Δb‖ check can fire);
     * the measured sharded arm is the L-only plan, whose STAGE 2 is the
       softmax-folded kernel (B and H unsharded) — its row uses
       ``fold=True`` (the plain stage_split model overstates that path by
       iters·2·L·H·4 bytes).
     """
+    ee_floor = min(iters, 2) / iters
     model = {
         "iteration_fused": rt_ops.dma_bytes_per_call(
             B, L, H, C, iters, form="iteration"),
@@ -91,6 +104,11 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
             B, L, H, C, iters, form="procedure"),
         "procedure_fused_bf16": rt_ops.dma_bytes_per_call(
             B, L, H, C, iters, form="procedure", stream_dtype="bf16"),
+        "procedure_fused_int8": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="procedure", stream_dtype="int8"),
+        "procedure_fused_early_exit_bound": rt_ops.dma_bytes_per_call(
+            B, L, H, C, iters, form="procedure",
+            early_exit_work_fraction=ee_floor),
         # the measured arm shards L only -> the fold kernel runs
         "sharded_stage_split": rt_ops.dma_bytes_per_call(
             B, L, H, C, iters, form="stage_split", fold=True),
@@ -104,6 +122,16 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
     assert (2 * model["procedure_fused_bf16"]["u_hat_stream_bytes"]
             == pf["u_hat_stream_bytes"]), (
         "bf16 streaming does not halve û bytes", model)
+    i8 = model["procedure_fused_int8"]
+    assert 4 * i8["u_hat_stream_bytes"] == pf["u_hat_stream_bytes"], (
+        "int8 streaming does not quarter û bytes", model)
+    assert i8["roundtrip_bytes"] == pf["roundtrip_bytes"], (
+        "int8 must not change the fp32 b/v/s roundtrip", model)
+    ee = model["procedure_fused_early_exit_bound"]
+    assert (ee["u_hat_stream_bytes"]
+            == int(round(pf["u_hat_stream_bytes"] * ee_floor))), (
+        "early-exit floor row must scale exactly the û stream", model)
+    assert ee["early_exit_work_fraction"] == ee_floor, model
     assert pf["total_bytes"] < it["total_bytes"], model
     assert (model["sharded_stage_split_unfolded"]["total_bytes"]
             - model["sharded_stage_split"]["total_bytes"]
@@ -111,6 +139,45 @@ def dma_model_row(B: int, L: int, H: int, C: int, iters: int) -> dict:
         "fold model must save exactly the per-iteration db round-trip",
         model)
     return model
+
+
+def early_exit_ladder(u_hat, iters: int, v_jnp) -> dict:
+    """Measured early-exit arm: sweep EARLY_EXIT_EPS_LADDER, record the
+    effective-tile-iterations counter the megakernel emits and the DMA
+    model re-evaluated at the MEASURED work fraction.  Cross-checks:
+    monotone non-increasing work along the ladder, the analytic
+    freeze-everything floor at the ∞ rung, and strictly-less-than-full
+    work at every ε > 0 rung that converged anything."""
+    B, L, H, C = u_hat.shape
+    l_tile = rt_ops.procedure_l_tile(B, L, H, C, "fp32", early_exit=True)
+    n_tiles = L // l_tile
+    full = iters * n_tiles
+    rows = []
+    for eps in EARLY_EXIT_EPS_LADDER:
+        v, eff = rt_ops.dynamic_routing_procedure_stats(
+            u_hat, iterations=iters, l_tile=l_tile, early_exit_eps=eps)
+        eff = int(eff)
+        frac = eff / full
+        rows.append({
+            "eps": eps,
+            "effective_tile_iterations": eff,
+            "full_tile_iterations": full,
+            "work_fraction": frac,
+            "max_abs_delta_vs_jnp":
+                float(np.abs(np.asarray(v) - v_jnp).max()),
+            "dma_model": rt_ops.dma_bytes_per_call(
+                B, L, H, C, iters, form="procedure",
+                early_exit_work_fraction=frac)})
+    effs = [r["effective_tile_iterations"] for r in rows]
+    assert all(a >= b for a, b in zip(effs, effs[1:])), (
+        "early-exit work not monotone in eps", effs)
+    assert all(e <= full for e in effs), (effs, full)
+    # ∞ rung: every tile works exactly twice (iteration 0 + the iteration
+    # that trips its first ‖Δb‖ check) — the analytic floor of the bound
+    # row in dma_model_row
+    assert effs[-1] == min(iters, 2) * n_tiles, (effs, iters, n_tiles)
+    return {"l_tile": l_tile, "n_l_tiles": n_tiles,
+            "full_tile_iterations": full, "ladder": rows}
 
 
 def measured_speedups(batch: int = 2):
@@ -156,17 +223,25 @@ def measured_speedups(batch: int = 2):
         proc_bf16 = build_router(RouterSpec(
             algorithm="dynamic", backend="pallas", iterations=iters,
             fusion="procedure", stream_dtype="bf16"))
+        # deep-edge arm: int8 û streaming (DESIGN.md §Quantized-routing)
+        proc_int8 = build_router(RouterSpec(
+            algorithm="dynamic", backend="pallas", iterations=iters,
+            fusion="procedure", stream_dtype="int8"))
 
         # measured-output cross-check vs the jnp backend (acceptance:
-        # <=1e-5 for fp32 arms; bf16 delta recorded, not gated)
+        # <=1e-5 for fp32 arms; bf16/int8 deltas recorded with loose
+        # sanity rails — the real int8 gate is top-1 accuracy in
+        # bench_accuracy, per ROADMAP item 1)
         v_jnp = np.asarray(router(u_hat))
         delta = {
             arm: float(np.abs(np.asarray(r(u_hat)) - v_jnp).max())
             for arm, r in (("sharded_fused", sharded_fused),
                            ("procedure_fused", proc),
-                           ("procedure_fused_bf16", proc_bf16))}
+                           ("procedure_fused_bf16", proc_bf16),
+                           ("procedure_fused_int8", proc_int8))}
         for arm in ("sharded_fused", "procedure_fused"):
             assert delta[arm] <= 1e-5, (name, arm, delta)
+        assert delta["procedure_fused_int8"] <= 0.1, (name, delta)
 
         t_n = time_stats(jax.jit(naive), u_hat, iters=reps)
         t_f = time_stats(jax.jit(lambda uh: router(uh)), u_hat, iters=reps)
@@ -176,6 +251,8 @@ def measured_speedups(batch: int = 2):
                                iters=reps)
         t_pb = kernel_arm_stats(jax.jit(lambda uh: proc_bf16(uh)), u_hat,
                                 iters=reps)
+        t_pi = kernel_arm_stats(jax.jit(lambda uh: proc_int8(uh)), u_hat,
+                                iters=reps)
         resolved = proc.resolve(u_hat)
         rows.append({"network": name,
                      "shape": {"B": B, "L": L, "H": H, "C": C,
@@ -184,9 +261,11 @@ def measured_speedups(batch: int = 2):
                      "sharded_fused": t_sf,
                      "procedure_fused": t_p,
                      "procedure_fused_bf16": t_pb,
+                     "procedure_fused_int8": t_pi,
                      "resolved_fusion": resolved.fusion,
                      "max_abs_delta_vs_jnp": delta,
                      "dma_model": dma_model_row(B, L, H, C, iters),
+                     "early_exit": early_exit_ladder(u_hat, iters, v_jnp),
                      "speedup": t_n["median_s"] / t_f["median_s"],
                      "sharded_fused_speedup":
                          t_n["median_s"] / t_sf["median_s"],
@@ -243,22 +322,27 @@ def _kernel_config(measured) -> dict:
             "l_tile_bf16": rt_ops.auto_l_tile(*dims, "bf16"),
             "procedure_l_tile_fp32": rt_ops.procedure_l_tile(*dims, "fp32"),
             "procedure_l_tile_bf16": rt_ops.procedure_l_tile(*dims, "bf16"),
+            "procedure_l_tile_int8": rt_ops.procedure_l_tile(*dims, "int8"),
+            "procedure_l_tile_early_exit": rt_ops.procedure_l_tile(
+                *dims, "fp32", early_exit=True),
         }
-    return {"l_tile": out, "stream_dtypes": ["fp32", "bf16"]}
+    return {"l_tile": out, "stream_dtypes": ["fp32", "bf16", "int8"],
+            "early_exit_eps_ladder": list(EARLY_EXIT_EPS_LADDER)}
 
 
 def main():
     measured = measured_speedups()
     print("== measured (CPU): naive vs routed RP schedule ==")
     print("network,naive_s,router_jnp_s,sharded_fused_s,procedure_fused_s,"
-          "procedure_bf16_s,speedup,sharded_fused_speedup,"
-          "procedure_fused_speedup")
+          "procedure_bf16_s,procedure_int8_s,speedup,"
+          "sharded_fused_speedup,procedure_fused_speedup")
     for r in measured:
         print(f"{r['network']},{r['naive']['median_s']:.4f},"
               f"{r['router_jnp']['median_s']:.4f},"
               f"{r['sharded_fused']['median_s']:.4f},"
               f"{r['procedure_fused']['median_s']:.4f},"
               f"{r['procedure_fused_bf16']['median_s']:.4f},"
+              f"{r['procedure_fused_int8']['median_s']:.4f},"
               f"{r['speedup']:.2f},{r['sharded_fused_speedup']:.2f},"
               f"{r['procedure_fused_speedup']:.2f}")
     print("# (CPU wall-time is a weak proxy — XLA CPU fuses the naive "
@@ -271,7 +355,16 @@ def main():
           f"{d0['procedure_fused_fp32']['total_bytes']:,}B (roundtrip "
           f"{d0['iteration_fused']['roundtrip_bytes']:,}B -> "
           f"{d0['procedure_fused_fp32']['roundtrip_bytes']:,}B), bf16 û "
-          f"stream {d0['procedure_fused_bf16']['u_hat_stream_bytes']:,}B")
+          f"stream {d0['procedure_fused_bf16']['u_hat_stream_bytes']:,}B, "
+          f"int8 {d0['procedure_fused_int8']['u_hat_stream_bytes']:,}B")
+    for r in measured:
+        ee = r["early_exit"]
+        effs = ",".join(str(x["effective_tile_iterations"])
+                        for x in ee["ladder"])
+        print(f"# early-exit ({r['network']}): eps ladder "
+              f"{list(EARLY_EXIT_EPS_LADDER)} -> effective tile-iterations "
+              f"[{effs}] of {ee['full_tile_iterations']} "
+              f"(l_tile={ee['l_tile']})")
     print()
     modeled = modeled_speedups()
     print("== modeled (paper Table-4 coefficients): GPU vs PIM RP ==")

@@ -8,6 +8,9 @@
    ``build_router`` (the planner -> execution loop, closed).
 4. Run the routing procedure through the fused Pallas kernel backend
    (interpret mode on CPU) and check it agrees.
+5. Serve the deep-edge tier — int8 û streaming + per-capsule early exit
+   in the procedure megakernel (DESIGN.md §Quantized-routing) — and read
+   the megakernel's own work counter showing the routing work saved.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -72,6 +75,43 @@ def main():
     out_fused = capsnet.forward(params, images, cfg, router=router_fused)
     err = float(jnp.abs(out["v"] - out_fused["v"]).max())
     print(f"pallas backend vs jnp backend routing: max |dv| = {err:.2e}")
+
+    # 5 — the deep-edge tier (DESIGN.md §Quantized-routing): int8 û codes
+    #     quarter the megakernel's dominant DMA term, early exit freezes
+    #     converged capsule tiles. Inference-only, accuracy-gated
+    #     (bench_accuracy: top-1 within 0.5pt of fp32).
+    router_edge = build_router(RouterSpec(iterations=cfg.routing_iters,
+                                          backend="pallas",
+                                          stream_dtype="int8",
+                                          early_exit_eps=0.05))
+    out_edge = capsnet.forward(params, images, cfg, router=router_edge)
+    drift = float(jnp.abs(out["class_probs"]
+                          - out_edge["class_probs"]).max())
+    agree = float(jnp.mean((jnp.argmax(out["class_probs"], -1)
+                            == jnp.argmax(out_edge["class_probs"], -1))
+                           .astype(jnp.float32)))
+    print(f"deep edge {router_edge.resolve()}: max prob drift {drift:.4f}, "
+          f"top-1 agreement {agree:.0%} (untrained smoke weights — the "
+          f"trained gate lives in bench_accuracy)")
+    # the megakernel's own work counter: effective tile-iterations done vs
+    # the fixed iterations x L_tiles grid, as eps loosens (eps=0 is
+    # bit-identical full work; huge eps freezes every tile after its
+    # mandatory first two passes)
+    from repro.kernels.routing import ops as rt_ops
+    u_hat = capsnet.encode_votes(params, images, cfg)
+    B, L, H, C = u_hat.shape
+    lt = rt_ops.procedure_l_tile(B, L, H, C, "fp32", early_exit=True)
+    full = cfg.routing_iters * (L // lt)
+    effs = {}
+    for eps in (0.0, 8.0, 1e6):
+        _, eff = rt_ops.dynamic_routing_procedure_stats(
+            u_hat, iterations=cfg.routing_iters, l_tile=lt,
+            early_exit_eps=eps)
+        effs[eps] = int(eff)
+    print(f"early-exit work (l_tile={lt}): "
+          + ", ".join(f"eps={eps:g}: {e}/{full}"
+                      for eps, e in effs.items())
+          + " tile-iterations")
 
 
 if __name__ == "__main__":

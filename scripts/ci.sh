@@ -26,6 +26,14 @@ if [[ "${1:-}" != "--fast" ]]; then
     "tests/test_router.py::test_differentiable_router_grad_matches_jnp" \
     "tests/test_router.py::test_capsnet_train_step_auto_plan_trains_fused"
 
+  echo "== deep edge: int8 û streaming + early-exit (parity/property/errors) =="
+  python -m pytest -q tests/test_quant.py \
+    "tests/test_kernels.py::test_property_early_exit_eps0_bit_identical" \
+    "tests/test_kernels.py::test_property_early_exit_monotone_work" \
+    "tests/test_kernels.py::test_dma_model_int8_and_early_exit" \
+    "tests/test_router.py::test_deep_edge_error_surface" \
+    "tests/test_router.py::test_deep_edge_resolved_plan_roundtrip"
+
   echo "== smoke: examples/quickstart.py (Router API end-to-end) =="
   PYTHONPATH=src python examples/quickstart.py
 
@@ -52,22 +60,70 @@ arms = d["measured"]
 assert arms, "no measured rows"
 for row in arms:
     for arm in ("naive", "router_jnp", "sharded_fused", "procedure_fused",
-                "procedure_fused_bf16"):
+                "procedure_fused_bf16", "procedure_fused_int8"):
         assert row[arm]["median_s"] > 0, (arm, row)
     # interpret-mode (CPU) pallas arms must be flagged modeled_only so
     # their wall-clock is never read as a hardware regression
     if d["provenance"]["pallas_interpret"]:
         for arm in ("sharded_fused", "procedure_fused",
-                    "procedure_fused_bf16"):
+                    "procedure_fused_bf16", "procedure_fused_int8"):
             assert row[arm]["modeled_only"] is True, (arm, row)
     dma = row["dma_model"]
     it, pf = dma["iteration_fused"], dma["procedure_fused_fp32"]
     assert pf["roundtrip_bytes"] < it["roundtrip_bytes"], dma
     assert (2 * dma["procedure_fused_bf16"]["u_hat_stream_bytes"]
             == pf["u_hat_stream_bytes"]), dma
+    # int8 quarters the û stream, leaves the fp32 b/v/s roundtrip alone
+    assert (4 * dma["procedure_fused_int8"]["u_hat_stream_bytes"]
+            == pf["u_hat_stream_bytes"]), dma
+    assert (dma["procedure_fused_int8"]["roundtrip_bytes"]
+            == pf["roundtrip_bytes"]), dma
     assert row["max_abs_delta_vs_jnp"]["procedure_fused"] <= 1e-5, row
+    assert row["max_abs_delta_vs_jnp"]["procedure_fused_int8"] <= 0.1, row
+    # measured early-exit ladder: monotone work, strictly below the fixed
+    # grid at the top rung, and exactly the analytic freeze-after-it-1
+    # floor there (min(iters, 2) iterations per tile)
+    ee, iters = row["early_exit"], row["shape"]["iters"]
+    effs = [r["effective_tile_iterations"] for r in ee["ladder"]]
+    full = ee["full_tile_iterations"]
+    assert full == iters * ee["n_l_tiles"], ee
+    assert all(a >= b for a, b in zip(effs, effs[1:])), effs
+    assert effs[-1] == min(iters, 2) * ee["n_l_tiles"], (effs, ee)
+    assert effs[-1] < full, (effs, full)   # needs iters >= 3 in the shape
 print("BENCH_rp_speedup.json OK:", len(arms), "measured row(s),",
-      "sharded-fused + procedure-fused (fp32/bf16) arms present")
+      "sharded-fused + procedure-fused (fp32/bf16/int8) + early-exit",
+      "ladder present")
+EOF
+
+  echo "== smoke: benchmarks.run --smoke --only accuracy (deep-edge gate) =="
+  PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only accuracy
+  python - <<'EOF'
+import json
+
+# STRICT loader: a NaN accuracy must fail CI, not serialize.
+def _reject(name):
+    raise AssertionError(f"non-finite constant {name} in BENCH_accuracy.json")
+
+d = json.loads(open("BENCH_accuracy.json").read(), parse_constant=_reject)
+for key in ("bench", "smoke", "config", "accuracy", "delta_vs_exact",
+            "gate"):
+    assert key in d, f"BENCH_accuracy.json missing {key!r}"
+assert d["bench"] == "accuracy"
+for mode in ("exact", "approx_no_recovery", "approx_with_recovery",
+             "int8", "early_exit", "int8_early_exit"):
+    assert 0.0 <= d["accuracy"][mode] <= 1.0, (mode, d["accuracy"])
+g = d["gate"]
+# the deep-edge accuracy gate (ROADMAP item 1): int8 / early-exit top-1
+# within tol of exact fp32 — 0.5pt at the full eval, the 2-sample
+# resolution floor under --smoke
+assert g["tol"] == max(0.005, 2.0 / g["n_eval"]), g
+for arm in ("int8", "early_exit", "int8_early_exit"):
+    assert g[f"{arm}_pass"] is True, (arm, g)
+    assert g[f"{arm}_delta"] <= g["tol"], (arm, g)
+print("BENCH_accuracy.json OK (strict JSON): deep-edge gate",
+      f"tol={g['tol']:.4f} on {g['n_eval']} samples,",
+      f"int8 delta={g['int8_delta']:.4f},",
+      f"early_exit delta={g['early_exit_delta']:.4f}")
 EOF
 
   echo "== smoke: examples/train_capsnet.py --smoke --routing fused (custom VJP) =="

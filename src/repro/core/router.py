@@ -74,8 +74,26 @@ class RouterSpec(NamedTuple):
                kernel).  Under a sharded plan execution is always the
                stage-split form; ``resolve()`` reports the concrete level.
     stream_dtype: dtype û streams HBM→VMEM at on the pallas backend —
-               "fp32" or "bf16" (fp32 in-kernel accumulation either way;
-               bf16 halves the DMA bytes of the only large operand).
+               "fp32", "bf16" or "int8" (fp32 in-kernel accumulation in
+               every case; bf16 halves the DMA bytes of the only large
+               operand, int8 quarters them via per-L-tile symmetric
+               quantization — DESIGN.md §Quantized-routing).  int8 is
+               procedure-megakernel-only: it forces the procedure form
+               under fusion="auto", rejects fusion="iteration", sharded
+               plans and ``differentiable=True`` (quantization rounding
+               has no derivative — train fp32/bf16, serve int8), and is
+               accuracy-gated by bench_accuracy, not the 1e-5 parity gate.
+    early_exit_eps: per-capsule early exit inside the procedure megakernel
+               (DESIGN.md §Quantized-routing): L-tiles whose deferred-Eq.4
+               logit update satisfied ‖Δb‖∞ < ε (checked after iteration
+               0) skip the Eq.4/Eq.5 work of every later iteration, their
+               couplings frozen in VMEM scratch — effective work becomes
+               proportional to unconverged capsules.  ε=0 is bit-identical
+               to the fixed grid; None (default) disables the convergence
+               scratch entirely.  Same composition rules as int8: forces
+               the procedure form, rejects fusion="iteration", sharded
+               plans, and ``differentiable=True`` (the recompute-b
+               backward replays the fixed-grid schedule).
     differentiable: the router will be differentiated (``jax.grad`` /
                ``jax.vjp`` through it — DESIGN.md §Training).  The jnp
                backend is differentiable by construction (plain autodiff,
@@ -99,6 +117,7 @@ class RouterSpec(NamedTuple):
     fusion: str = "auto"
     stream_dtype: str = "fp32"
     differentiable: bool = False
+    early_exit_eps: Optional[float] = None
 
     def option(self, name: str, default: Any = None) -> Any:
         for k, v in self.options:
@@ -191,9 +210,10 @@ def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
         return routing_lib.dynamic_routing(u_hat, cfg)
     if spec.backend == "pallas":
         from repro.kernels.routing import ops as routing_ops
-        form = routing_ops.resolve_fusion(spec.fusion, jnp.shape(u_hat),
-                                          spec.stream_dtype,
-                                          sharded=bool(axes))
+        form = routing_ops.resolve_fusion(
+            spec.fusion, jnp.shape(u_hat), spec.stream_dtype,
+            sharded=bool(axes),
+            early_exit=spec.early_exit_eps is not None)
         if form == "stage_split":
             # sharded-fused: stage-split kernels + cross-shard psums at
             # the Table-2 aggregation points (DESIGN.md §Sharded-fused)
@@ -202,10 +222,13 @@ def _dynamic_run(args, spec: RouterSpec, axes: Mapping[str, str]):
                 use_approx=spec.use_approx, stream_dtype=spec.stream_dtype,
                 interpret=_pallas_interpret_mode())
         if form == "procedure":
-            # whole-procedure megakernel (DESIGN.md §Procedure-fused)
+            # whole-procedure megakernel (DESIGN.md §Procedure-fused);
+            # int8 û streaming and early exit live only here
+            # (DESIGN.md §Quantized-routing)
             return routing_ops.dynamic_routing_procedure_fused(
                 u_hat, iterations=spec.iterations,
                 use_approx=spec.use_approx, stream_dtype=spec.stream_dtype,
+                early_exit_eps=spec.early_exit_eps,
                 interpret=_pallas_interpret_mode())
         return routing_ops.dynamic_routing_fused(
             u_hat, iterations=spec.iterations, use_approx=spec.use_approx,
@@ -418,26 +441,31 @@ class ResolvedPlan(tuple):
     fusion:       "procedure" | "iteration" | "stage_split" — the concrete
                   kernel form a pallas-backend router will run (DESIGN.md
                   §Procedure-fused); None for the jnp backend.
-    stream_dtype: "fp32" | "bf16" û streaming dtype; None for jnp.
+    stream_dtype: "fp32" | "bf16" | "int8" û streaming dtype; None for jnp.
     differentiable: True iff execution runs the fused procedure kernel
                   through its recompute-b custom VJP (DESIGN.md §Training)
                   — i.e. ``jax.grad`` hits the backward megakernel.  False
                   for the jnp backend (plain autodiff, no fused backward)
                   and for forward-only pallas execution.
+    early_exit_eps: the ‖Δb‖∞ convergence threshold the megakernel will
+                  skip converged L-tiles at (DESIGN.md §Quantized-routing);
+                  None when early exit is off or the backend is jnp.
     """
 
     def __new__(cls, axes=(), fusion=None, stream_dtype=None,
-                differentiable=False):
+                differentiable=False, early_exit_eps=None):
         self = super().__new__(cls, tuple(axes))
         self.fusion = fusion
         self.stream_dtype = stream_dtype
         self.differentiable = differentiable
+        self.early_exit_eps = early_exit_eps
         return self
 
     def __repr__(self):
         return (f"ResolvedPlan(axes={tuple(self)}, fusion={self.fusion!r}, "
                 f"stream_dtype={self.stream_dtype!r}, "
-                f"differentiable={self.differentiable!r})")
+                f"differentiable={self.differentiable!r}, "
+                f"early_exit_eps={self.early_exit_eps!r})")
 
 
 class Router:
@@ -473,40 +501,51 @@ class Router:
         return ResolvedPlan(axes, *self._resolve_fusion(axes, shapes))
 
     def _resolve_fusion(self, axes, shapes):
-        """(fusion, stream_dtype, differentiable) the pallas backend will
-        execute with — the same ``resolve_fusion`` the run path calls, so
-        the report can never drift from execution.  jnp backend:
-        (None, None, False); a no-arg ``resolve()`` (historically legal for
-        static plans) reports None for fusion when the "auto" fit check
-        would need the votes shape."""
+        """(fusion, stream_dtype, differentiable, early_exit_eps) the pallas
+        backend will execute with — the same ``resolve_fusion`` the run
+        path calls, so the report can never drift from execution.  jnp
+        backend: (None, None, False, None); a no-arg ``resolve()``
+        (historically legal for static plans) reports None for fusion when
+        the "auto" fit check would need the votes shape — except for the
+        deep-edge knobs (int8 / early exit), which resolve "procedure"
+        without a shape."""
         if self.spec.backend != "pallas":
-            return None, None, False
+            return None, None, False, None
         if self.spec.algorithm != "dynamic":
             # EM: stage-split is the only form
-            return "stage_split", "fp32", False
-        if not shapes and not axes and self.spec.fusion == "auto":
-            return None, self.spec.stream_dtype, False
+            return "stage_split", "fp32", False, None
+        early_exit = self.spec.early_exit_eps is not None
+        deep_edge = self.spec.stream_dtype == "int8" or early_exit
+        if (not shapes and not axes and self.spec.fusion == "auto"
+                and not deep_edge):
+            return None, self.spec.stream_dtype, False, None
         from repro.kernels.routing import ops as routing_ops
         form = routing_ops.resolve_fusion(self.spec.fusion,
                                           shapes[0] if shapes else None,
                                           self.spec.stream_dtype,
-                                          sharded=bool(axes))
+                                          sharded=bool(axes),
+                                          early_exit=early_exit)
         if self.spec.differentiable:
             # mirrors _dynamic_run's differentiable dispatch: the custom
             # VJP exists for the procedure form only; anything else falls
-            # back to jnp autodiff (reported as the jnp triple).
+            # back to jnp autodiff (reported as the jnp 4-tuple).
             if form == "procedure" and not axes:
-                return "procedure", self.spec.stream_dtype, True
-            return None, None, False
-        return form, self.spec.stream_dtype, False
+                return "procedure", self.spec.stream_dtype, True, None
+            return None, None, False, None
+        return (form, self.spec.stream_dtype, False,
+                self.spec.early_exit_eps)
 
     def _resolve_shapes(self, shapes: tuple) -> Tuple[Tuple[str, str], ...]:
         if not self.plan.auto:
             return tuple(self.plan.axes)
-        if self.spec.differentiable and self.spec.backend == "pallas":
-            # differentiable auto plans resolve shard-local: the §5.1.2
-            # planner's sharded pick would force the stage-split form,
-            # which has no custom VJP (DESIGN.md §Training)
+        if self.spec.backend == "pallas" and (
+                self.spec.differentiable
+                or self.spec.stream_dtype == "int8"
+                or self.spec.early_exit_eps is not None):
+            # these auto plans resolve shard-local: the §5.1.2 planner's
+            # sharded pick would force the stage-split form, which has no
+            # custom VJP (DESIGN.md §Training), no int8 dequant path and
+            # no convergence scratch (DESIGN.md §Quantized-routing)
             return ()
         return plan_axes(self.spec, self.plan, shapes)
 
@@ -677,6 +716,7 @@ class Router:
                 f"fusion={self.spec.fusion!r}, "
                 f"stream_dtype={self.spec.stream_dtype!r}, "
                 f"differentiable={self.spec.differentiable!r}, "
+                f"early_exit_eps={self.spec.early_exit_eps!r}, "
                 f"plan={'auto' if self.plan.auto else self.plan.axes}, "
                 f"pipeline={self.plan.pipeline!r})")
 
@@ -717,6 +757,56 @@ def _validate(algo: Algorithm, spec: RouterSpec, plan: ExecutionPlan):
             "fusion='procedure' is shard-local (the megakernel keeps b/v/s "
             "in VMEM across iterations and cannot surface for the Table-2 "
             "psums); use fusion='auto' or 'iteration' with sharded plans")
+    # --- deep-edge tier (DESIGN.md §Quantized-routing): int8 û streaming
+    # and early exit exist only in the forward procedure megakernel
+    if spec.early_exit_eps is not None:
+        eps = spec.early_exit_eps
+        if not isinstance(eps, (int, float)) or isinstance(eps, bool) \
+                or not float(eps) >= 0.0:
+            raise ValueError(
+                f"early_exit_eps must be a float >= 0 (the ‖Δb‖∞ "
+                f"convergence threshold; 0 keeps the fixed grid) or None; "
+                f"got {eps!r}")
+        if not _pallas_dynamic:
+            raise ValueError(
+                "early_exit_eps is a pallas-backend knob of the 'dynamic' "
+                "algorithm (only the procedure megakernel tracks per-tile "
+                "convergence); leave early_exit_eps=None")
+        if spec.fusion == "iteration":
+            raise ValueError(
+                "early_exit_eps requires the procedure megakernel: "
+                "fusion='iteration' has no per-tile convergence scratch; "
+                "use fusion='auto' or 'procedure'")
+        if plan.axes:
+            raise ValueError(
+                "early-exit routing is shard-local: the per-tile "
+                "convergence scratch lives in the procedure megakernel, "
+                "which cannot surface for the Table-2 psums; use an "
+                "unsharded plan (plan=None or 'auto')")
+        if spec.differentiable:
+            raise ValueError(
+                "differentiable=True requires early_exit_eps=None: the "
+                "recompute-b backward replays the fixed-grid schedule "
+                "(data-dependent tile skipping has no replay); train "
+                "fixed-grid, serve early-exit")
+    if spec.stream_dtype == "int8":
+        if spec.differentiable:
+            raise ValueError(
+                "differentiable=True requires stream_dtype 'fp32' or "
+                "'bf16': int8 û quantization rounds to the nearest code "
+                "(no derivative) and the backward megakernel has no "
+                "dequant path; train fp32/bf16, serve int8")
+        if spec.fusion == "iteration":
+            raise ValueError(
+                "stream_dtype='int8' requires the procedure megakernel "
+                "(per-tile scales and dequant are megakernel-only); use "
+                "fusion='auto' or 'procedure'")
+        if plan.axes:
+            raise ValueError(
+                "stream_dtype='int8' is shard-local: only the procedure "
+                "megakernel has a dequant path, and it cannot surface for "
+                "the Table-2 psums; use an unsharded plan (plan=None or "
+                "'auto')")
     if spec.differentiable and spec.backend == "pallas":
         # DESIGN.md §Training: the recompute-b custom VJP exists for the
         # 'dynamic' procedure megakernel only

@@ -177,24 +177,51 @@ def routing_iteration_fused(u_hat: jax.Array, b: jax.Array, v_prev: jax.Array,
 # ---------------------------------------------------------------------------
 
 
-def _routing_procedure_kernel(u_ref, v_out_ref, b_scr, v_scr, s_scr, *,
-                              h: int, c_dim: int, l_tile: int,
+def _routing_procedure_kernel(*refs, h: int, c_dim: int, l_tile: int,
                               n_l_tiles: int, iterations: int,
-                              use_approx: bool):
+                              use_approx: bool, quantized: bool,
+                              early_exit_eps):
     """One grid step = one (iteration, L-tile) cell; grid is row-major so the
     L-tiles of iteration t all run before iteration t+1.
 
+    Positional refs, in pallas order (inputs, outputs, scratch); optional
+    refs appear only when the matching static flag is set:
+
     u_ref:     (B, L_t, H·C) lane-packed û tile (streamed, read once per
-               iteration; bf16 or fp32 — cast to fp32 on register load)
+               iteration; fp32/bf16, or int8 codes when ``quantized``)
+    scale_ref: (1, 1) per-L-tile symmetric dequant scale   [quantized only]
     v_out_ref: (B, H, C) final routed output (written at the last grid step)
+    cnt_ref:   (1, 1) int32 effective-tile-iterations      [early-exit only]
     b_scr:     (L, H) routing logits       — VMEM-resident ALL iterations
     v_scr:     (B, H, C) previous v        — VMEM-resident ALL iterations
     s_scr:     (B, H, C) vote-sum accum    — VMEM-resident ALL iterations
+    c_scr:     (L, H) frozen couplings     [early-exit only]
+    conv_scr:  (n_l_tiles, 1) converged?   [early-exit only]
 
     Unlike the per-iteration kernel, b/v/s never cross back to HBM between
     iterations and squash (Eq.3) runs in-kernel at the last L-tile of each
-    iteration — the only HBM write of the whole procedure is the final v.
+    iteration — the only HBM write of the whole procedure is the final v
+    (plus the 4-byte work counter under early exit).
+
+    Early exit (DESIGN.md §Quantized-routing): a tile whose deferred-Eq.4
+    logit update satisfied ‖Δb‖∞ < ε at some iteration t ≥ 1 skips the
+    Eq.4/Eq.5 work (db, b update, softmax) for every iteration > t; its
+    coupling coefficients stay frozen in c_scr and the Eq.2 vote-sum pass
+    — which every tile of every iteration must contribute to — reads them
+    from there.  With ε = 0 no tile ever converges (‖Δb‖∞ < 0 is never
+    true), so the computation is bit-identical to the fixed-grid path.
+    Iteration 0 is exempt from the check: v_prev = 0 there makes Δb ≡ 0,
+    which would trivially "converge" every tile at any ε > 0.
     """
+    refs = list(refs)
+    u_ref = refs.pop(0)
+    scale_ref = refs.pop(0) if quantized else None
+    v_out_ref = refs.pop(0)
+    cnt_ref = refs.pop(0) if early_exit_eps is not None else None
+    b_scr, v_scr, s_scr = refs.pop(0), refs.pop(0), refs.pop(0)
+    c_scr = refs.pop(0) if early_exit_eps is not None else None
+    conv_scr = refs.pop(0) if early_exit_eps is not None else None
+
     it = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -204,20 +231,51 @@ def _routing_procedure_kernel(u_ref, v_out_ref, b_scr, v_scr, s_scr, *,
         # v_prev = 0 (ref.py proves this equals Algorithm 1's eager form).
         b_scr[...] = jnp.zeros_like(b_scr)
         v_scr[...] = jnp.zeros_like(v_scr)
+        if conv_scr is not None:
+            conv_scr[...] = jnp.zeros_like(conv_scr)
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
 
     u = u_ref[...].astype(jnp.float32)           # fp32 accumulation
+    if quantized:
+        u = u * scale_ref[0, 0]                  # symmetric per-tile dequant
     batch = u.shape[0]
     u = u.reshape(batch, l_tile, h, c_dim)       # unpack lanes -> (H, C)
-    v_prev = v_scr[...]
-
-    # --- deferred Eq.4: db[l,h] = sum_{k,c} û[k,l,h,c] * v_prev[k,h,c]
-    db = jnp.sum(u * v_prev[:, None], axis=(0, 3))           # (L_t, H)
     rows = pl.ds(j * l_tile, l_tile)
-    b_new = b_scr[rows, :] + db
-    b_scr[rows, :] = b_new
 
-    # --- Eq.5 softmax + Eq.2 partial weighted sum, accumulated in scratch
-    coup = _softmax_h_inkernel(b_new, use_approx)            # (L_t, H)
+    def _eq4_eq5():
+        """Deferred Eq.4 logit update + Eq.5 softmax for this tile."""
+        v_prev = v_scr[...]
+        # db[l,h] = sum_{k,c} û[k,l,h,c] * v_prev[k,h,c]
+        db = jnp.sum(u * v_prev[:, None], axis=(0, 3))       # (L_t, H)
+        b_new = b_scr[rows, :] + db
+        b_scr[rows, :] = b_new
+        return db, _softmax_h_inkernel(b_new, use_approx)    # (L_t, H)
+
+    if early_exit_eps is None:
+        _, coup = _eq4_eq5()
+    else:
+        active = conv_scr[pl.ds(j, 1), :][0, 0] == 0.0
+
+        @pl.when(active)
+        def _work():
+            db, coup_new = _eq4_eq5()
+            c_scr[rows, :] = coup_new
+            # ε = 0 stays fixed-grid: ‖db‖∞ ≥ 0 is never < 0.  Iteration 0
+            # (db ≡ 0, see docstring) never sets the flag.
+            delta = jnp.max(jnp.abs(db))
+            frozen = (delta < early_exit_eps) & (it > 0)
+            conv_scr[pl.ds(j, 1), :] = jnp.where(frozen, 1.0, 0.0).reshape(
+                1, 1)
+            cnt_ref[0, 0] += 1
+
+        # converged tiles reuse the coupling frozen at their last worked
+        # iteration; f32 scratch round-trips are exact, so the ε = 0 path
+        # computes with bit-identical coup values.
+        coup = c_scr[rows, :]
+
+    # --- Eq.2 partial weighted sum, accumulated in scratch (ALWAYS runs:
+    # frozen tiles still contribute their Eq.2 term, keeping the s
+    # accumulation structure — and hence ε = 0 bit-identity — intact)
     s_part = jnp.sum(u * coup[None, :, :, None], axis=1)     # (B, H, C)
 
     @pl.when(j == 0)
@@ -240,41 +298,91 @@ def _routing_procedure_kernel(u_ref, v_out_ref, b_scr, v_scr, s_scr, *,
 
 
 @functools.partial(jax.jit, static_argnames=("iterations", "l_tile",
-                                             "use_approx", "interpret"))
-def routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
+                                             "use_approx", "interpret",
+                                             "early_exit_eps"))
+def routing_procedure_fused(u_hat: jax.Array, scales: jax.Array | None = None,
+                            *, iterations: int = 3,
                             l_tile: int = 128, use_approx: bool = False,
-                            interpret: bool = True) -> jax.Array:
-    """Whole routing procedure in ONE pallas_call.  Returns v (B, H, C).
+                            interpret: bool = True,
+                            early_exit_eps: float | None = None):
+    """Whole routing procedure in ONE pallas_call.
+
+    Returns v (B, H, C), or ``(v, effective_tile_iterations)`` — the int32
+    count of (iteration, L-tile) grid cells that did Eq.4/Eq.5 work — when
+    ``early_exit_eps`` is set (fixed grid ≡ iterations · L/l_tile).
 
     u_hat: (B, L, H, C) in fp32 or bf16 — the *input dtype* is the stream
-    dtype (ops.py::dynamic_routing_procedure_fused picks it); all in-kernel
+    dtype (ops.py::dynamic_routing_procedure_fused picks it) — or int8
+    codes with ``scales`` (L/l_tile, 1) fp32 per-tile symmetric scales from
+    ops.py::quantize_u_stream (DESIGN.md §Quantized-routing); all in-kernel
     arithmetic and the b/v/s scratch are fp32.  VMEM working set:
     2·B·l_tile·H·C·itemsize (double-buffered û) + L·H·4 (b) +
-    3·B·H·C·4 (v, s, out) — see ops.py::procedure_vmem_bytes.
+    3·B·H·C·4 (v, s, out), plus L·H·4 (frozen c) + L/l_tile·4 (converged
+    flags) under early exit — see ops.py::procedure_vmem_bytes.
     """
     B, L, H, C = u_hat.shape
     if L % l_tile != 0:
         raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
-    if u_hat.dtype not in (jnp.float32, jnp.bfloat16):
+    n_l_tiles = L // l_tile
+    quantized = scales is not None
+    if quantized:
+        if u_hat.dtype != jnp.int8:
+            raise ValueError(f"per-tile scales given but û dtype is "
+                             f"{u_hat.dtype} — expected int8 codes from "
+                             f"quantize_u_stream")
+        if scales.shape != (n_l_tiles, 1):
+            raise ValueError(f"scales shape {scales.shape} != "
+                             f"(L/l_tile, 1) = ({n_l_tiles}, 1)")
+    elif u_hat.dtype == jnp.int8:
+        raise ValueError("int8 û stream needs per-tile scales "
+                         "(ops.quantize_u_stream)")
+    elif u_hat.dtype not in (jnp.float32, jnp.bfloat16):
         u_hat = u_hat.astype(jnp.float32)
+    early_exit = early_exit_eps is not None
+    if early_exit and not (float(early_exit_eps) >= 0.0):
+        raise ValueError(f"early_exit_eps must be >= 0, got {early_exit_eps}")
+
     u_packed = u_hat.reshape(B, L, H * C)        # lane-packed stream layout
-    grid = (iterations, L // l_tile)
+    grid = (iterations, n_l_tiles)
     kernel = functools.partial(
         _routing_procedure_kernel, h=H, c_dim=C, l_tile=l_tile,
-        n_l_tiles=L // l_tile, iterations=iterations, use_approx=use_approx)
-    return pl.pallas_call(
+        n_l_tiles=n_l_tiles, iterations=iterations, use_approx=use_approx,
+        quantized=quantized,
+        early_exit_eps=float(early_exit_eps) if early_exit else None)
+
+    in_specs = [pl.BlockSpec((B, l_tile, H * C), lambda it, j: (0, j, 0))]
+    inputs = [u_packed]
+    if quantized:
+        in_specs.append(pl.BlockSpec((1, 1), lambda it, j: (j, 0)))
+        inputs.append(scales.astype(jnp.float32))
+    out_specs = pl.BlockSpec((B, H, C), lambda it, j: (0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((B, H, C), jnp.float32)
+    scratch = [
+        pltpu.VMEM((L, H), jnp.float32),     # b   — all iterations
+        pltpu.VMEM((B, H, C), jnp.float32),  # v   — all iterations
+        pltpu.VMEM((B, H, C), jnp.float32),  # s   — per-iteration accum
+    ]
+    if early_exit:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1), lambda it, j: (0, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((1, 1), jnp.int32)]
+        scratch += [
+            pltpu.VMEM((L, H), jnp.float32),         # frozen couplings
+            pltpu.VMEM((n_l_tiles, 1), jnp.float32),  # converged flags
+        ]
+    out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[pl.BlockSpec((B, l_tile, H * C), lambda it, j: (0, j, 0))],
-        out_specs=pl.BlockSpec((B, H, C), lambda it, j: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, C), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((L, H), jnp.float32),     # b   — all iterations
-            pltpu.VMEM((B, H, C), jnp.float32),  # v   — all iterations
-            pltpu.VMEM((B, H, C), jnp.float32),  # s   — per-iteration accum
-        ],
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(u_packed)
+    )(*inputs)
+    if early_exit:
+        v, cnt = out
+        return v, cnt[0, 0]
+    return out
 
 
 # ---------------------------------------------------------------------------

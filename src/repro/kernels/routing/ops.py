@@ -6,7 +6,11 @@ Three execution shapes (DESIGN.md §Procedure-fused, §Sharded-fused):
   ``pallas_call`` with grid (iterations, L_tiles); b/v/s live in VMEM
   scratch across all iterations, squash runs in-kernel, and only the final
   v crosses back to HBM.  Optional bf16 û streaming (fp32 accumulation)
-  halves the DMA bytes of the only large operand.  Shard-local only.
+  halves the DMA bytes of the only large operand; int8 streaming
+  (per-L-tile symmetric scale, ``quantize_u_stream``) quarters them, and
+  ``early_exit_eps`` skips converged L-tiles' Eq.4/Eq.5 work
+  (``dynamic_routing_procedure_stats`` reports the effective work —
+  DESIGN.md §Quantized-routing).  Shard-local only.
 * ``dynamic_routing_fused`` — the single-pass per-iteration kernel; every
   Table-2 aggregation is shard-local, so it only runs unsharded.  Kept as
   the fallback when the procedure kernel's VMEM working set does not fit.
@@ -91,21 +95,32 @@ _auto_l_tile = auto_l_tile    # internal alias
 
 
 def procedure_vmem_bytes(B: int, L: int, H: int, C: int, l_tile: int,
-                         stream_dtype: str = "fp32") -> int:
+                         stream_dtype: str = "fp32",
+                         early_exit: bool = False) -> int:
     """VMEM working set of the whole-procedure megakernel: the
     double-buffered û stream block plus the resident b/v/s scratch and the
-    output block (all fp32 regardless of stream dtype)."""
+    output block (all fp32 regardless of stream dtype).  Early exit adds
+    the (L,H) frozen-coupling scratch plus the per-tile converged flags
+    (DESIGN.md §Quantized-routing); the int8 per-tile scale operand and the
+    4-byte work counter are sub-KB and folded into the flag term."""
     u_blk = B * l_tile * H * C * _stream_itemsize(stream_dtype)
-    return 2 * u_blk + L * H * 4 + 3 * B * H * C * 4
+    total = 2 * u_blk + L * H * 4 + 3 * B * H * C * 4
+    if early_exit:
+        total += L * H * 4 + (L // max(l_tile, 1)) * 4
+    return total
 
 
 def procedure_l_tile(B: int, L: int, H: int, C: int,
-                     stream_dtype: str = "fp32") -> int:
+                     stream_dtype: str = "fp32", *,
+                     early_exit: bool = False) -> int:
     """l_tile for the megakernel: unlike the per-iteration pick, the û
     block budget *shrinks* to whatever the total procedure budget leaves
     after the resident b/v/s scratch — so a cap-bound (large B·H·C) shape
-    gets a smaller tile instead of disqualifying procedure fusion."""
-    fixed = L * H * 4 + 3 * B * H * C * 4
+    gets a smaller tile instead of disqualifying procedure fusion.  Early
+    exit doubles the logit-sized fixed cost (frozen-c scratch); the
+    l_tile-dependent flag array is <= L·4 bytes and ignored here (it would
+    make the pick circular)."""
+    fixed = L * H * 4 * (2 if early_exit else 1) + 3 * B * H * C * 4
     budget = min(_U_TILE_BUDGET,
                  max(0, PROCEDURE_VMEM_BUDGET - fixed) // 2)
     return pick_l_tile(L, budget, B * H * C * _stream_itemsize(stream_dtype))
@@ -143,7 +158,7 @@ def procedure_train_l_tile(B: int, L: int, H: int, C: int,
 
 
 def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
-                   sharded: bool = False) -> str:
+                   sharded: bool = False, early_exit: bool = False) -> str:
     """Resolve a RouterSpec ``fusion`` knob to the concrete kernel form.
 
     Returns "procedure" | "iteration" for shard-local execution and
@@ -153,19 +168,51 @@ def resolve_fusion(fusion: str, shape, stream_dtype: str = "fp32",
     plan is shard-local and ``procedure_vmem_bytes`` at the
     budget-shrunk ``procedure_l_tile`` fits; ``shape`` is only consulted on
     that branch.
+
+    The deep-edge knobs (DESIGN.md §Quantized-routing) are
+    procedure-megakernel-only: int8 dequant and the per-tile convergence
+    scratch exist nowhere else, so ``stream_dtype="int8"`` or
+    ``early_exit=True`` resolve "auto" to "procedure" unconditionally —
+    a VMEM-overflow shape runs with a budget-shrunk (worst case 1-row)
+    tile rather than falling back — and raise under a sharded plan or an
+    explicit ``fusion="iteration"``.
     """
     if fusion not in FUSION_LEVELS:
         raise ValueError(f"unknown fusion level {fusion!r}; expected one of "
                          f"{FUSION_LEVELS}")
+    deep_edge = stream_dtype == "int8" or early_exit
     if sharded:
         if fusion == "procedure":
             raise ValueError(
                 "fusion='procedure' is shard-local (the megakernel keeps "
                 "b/v/s in VMEM and cannot surface for the Table-2 psums); "
                 "use fusion='auto' or 'iteration' with sharded plans")
+        if stream_dtype == "int8":
+            raise ValueError(
+                "stream_dtype='int8' is shard-local: only the procedure "
+                "megakernel has a dequant path, and it cannot surface for "
+                "the Table-2 psums; use an unsharded plan (plan=None or "
+                "'auto')")
+        if early_exit:
+            raise ValueError(
+                "early-exit routing is shard-local: the per-tile "
+                "convergence scratch lives in the procedure megakernel, "
+                "which cannot surface for the Table-2 psums; use an "
+                "unsharded plan (plan=None or 'auto')")
         return "stage_split"
     if fusion != "auto":
+        if fusion == "iteration" and deep_edge:
+            knob = ("stream_dtype='int8'" if stream_dtype == "int8"
+                    else "early_exit_eps")
+            raise ValueError(
+                f"{knob} requires the procedure megakernel; "
+                "fusion='iteration' has no "
+                + ("dequant path" if stream_dtype == "int8"
+                   else "per-tile convergence scratch")
+                + " — use fusion='auto' or 'procedure'")
         return fusion
+    if deep_edge:
+        return "procedure"
     if shape is None:
         raise ValueError("fusion='auto' needs the votes shape to resolve")
     B, L, H, C = shape
@@ -179,7 +226,8 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
                        iterations: int = 3, *, form: str = "iteration",
                        stream_dtype: str = "fp32",
                        fold: bool = False,
-                       backward: bool = False) -> dict:
+                       backward: bool = False,
+                       early_exit_work_fraction: float | None = None) -> dict:
     """HBM<->VMEM traffic per routing call, derived from the BlockSpecs of
     each kernel form (kernel.py):
 
@@ -204,7 +252,18 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
       non-fold model overstates that path by iterations·2·L·H·4 bytes.
 
     bf16 streaming (``stream_dtype="bf16"``) halves the û term — the only
-    O(B·L·H·C) one — and leaves the fp32 roundtrip terms unchanged.
+    O(B·L·H·C) one — and leaves the fp32 roundtrip terms unchanged; int8
+    quarters it (the per-L-tile fp32 scales are O(L/l_tile) bytes —
+    noise — and are not modeled).  int8 is procedure-form-only and has no
+    backward (DESIGN.md §Quantized-routing).
+
+    ``early_exit_work_fraction`` (procedure form, forward only) scales the
+    û stream term by the measured effective-tile-iterations fraction
+    eff / (iterations · L_tiles) ∈ (0, 1]: the ideal where a converged
+    tile's û block is never fetched.  The interpret-mode fixed-grid
+    executor still fetches every block (only the Eq.4/Eq.5 FLOPs are
+    skipped), so like every number here this is the modeled DMA bound,
+    not a wall-clock claim.
 
     The naive jnp path (ref.py) touches û twice per iteration (Eq.2 + Eq.4
     einsums) plus materialised intermediates — measured ~5x the fused bound
@@ -227,11 +286,29 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
     bh = L * H * f
     vhc = B * H * C * f
     u_f32 = B * L * H * C * 4
+    if stream_dtype == "int8" and form != "procedure":
+        raise ValueError(
+            "stream_dtype='int8' is a procedure-megakernel tier (no other "
+            f"form has a dequant path); got form={form!r}")
+    if early_exit_work_fraction is not None:
+        if form != "procedure" or backward:
+            raise ValueError(
+                "early_exit_work_fraction models the forward procedure "
+                f"megakernel only; got form={form!r}, backward={backward}")
+        if not 0.0 < early_exit_work_fraction <= 1.0:
+            raise ValueError(
+                "early_exit_work_fraction must be in (0, 1] (= eff / "
+                f"(iterations * L_tiles)); got {early_exit_work_fraction}")
     if backward:
         if form != "procedure":
             raise ValueError(
                 "backward=True models the recompute-b VJP of the procedure "
                 f"megakernel only (form={form!r} has no custom VJP)")
+        if stream_dtype == "int8":
+            raise ValueError(
+                "backward=True has no int8 form: quantization rounding is "
+                "non-differentiable and the backward megakernel has no "
+                "dequant path (DESIGN.md §Quantized-routing)")
         return {
             "form": form,
             "fold": fold,
@@ -250,6 +327,8 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
         roundtrip = iterations * (2 * bh + 4 * vhc)
     elif form == "procedure":
         u_stream = iterations * u
+        if early_exit_work_fraction is not None:
+            u_stream = int(round(u_stream * early_exit_work_fraction))
         roundtrip = vhc
     elif form == "stage_split":
         u_stream = iterations * 2 * u
@@ -265,6 +344,7 @@ def dma_bytes_per_call(B: int, L: int, H: int, C: int,
         "fold": fold,
         "stream_dtype": stream_dtype,
         "backward": False,
+        "early_exit_work_fraction": early_exit_work_fraction,
         "u_hat_stream_bytes": u_stream,
         "roundtrip_bytes": roundtrip,
         "total_bytes": u_stream + roundtrip,
@@ -301,28 +381,107 @@ def dynamic_routing_fused(u_hat: jax.Array, *, iterations: int = 3,
     return v
 
 
+@functools.partial(jax.jit, static_argnames=("l_tile",))
+def quantize_u_stream(u_hat: jax.Array, l_tile: int):
+    """Per-L-tile symmetric int8 quantization of the û stream
+    (DESIGN.md §Quantized-routing).
+
+    Each contiguous block of ``l_tile`` L-rows — exactly one megakernel
+    grid tile — shares one fp32 scale: scale_j = max|û_tile_j| / 127, so
+    codes span the full [-127, 127] range of the tile and dequantization
+    (code · scale, in-kernel) has per-element error <= scale/2.  An
+    all-zero tile gets the scale floor 1/127 (codes are all 0 either way;
+    the floor keeps the scale finite).
+
+    Returns (codes int8 (B, L, H, C), scales fp32 (L/l_tile, 1)).
+    """
+    B, L, H, C = u_hat.shape
+    if L % l_tile != 0:
+        raise ValueError(f"L={L} not divisible by l_tile={l_tile}")
+    n = L // l_tile
+    u = u_hat.astype(jnp.float32).reshape(B, n, l_tile, H, C)
+    absmax = jnp.max(jnp.abs(u), axis=(0, 2, 3, 4))          # (n,)
+    scale = jnp.where(absmax > 0.0, absmax, 1.0) / 127.0
+    q = jnp.clip(jnp.round(u / scale[None, :, None, None, None]),
+                 -127.0, 127.0).astype(jnp.int8)
+    return q.reshape(B, L, H, C), scale.reshape(n, 1)
+
+
+def _procedure_call(u_hat, iterations, use_approx, l_tile, stream_dtype,
+                    interpret, early_exit_eps):
+    """Shared megakernel dispatch: tile pick, stream cast / int8 quantize,
+    kernel call.  Returns (v, effective_tile_iterations int32) — the
+    counter is the static fixed-grid count when early exit is off."""
+    B, L, H, C = u_hat.shape
+    early_exit = early_exit_eps is not None
+    if l_tile is None:
+        l_tile = procedure_l_tile(B, L, H, C, stream_dtype,
+                                  early_exit=early_exit)
+    if stream_dtype == "int8":
+        q, scales = quantize_u_stream(u_hat, l_tile)
+        out = routing_procedure_fused(q, scales, iterations=iterations,
+                                      l_tile=l_tile, use_approx=use_approx,
+                                      interpret=interpret,
+                                      early_exit_eps=early_exit_eps)
+    else:
+        u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
+        out = routing_procedure_fused(u_hat, iterations=iterations,
+                                      l_tile=l_tile, use_approx=use_approx,
+                                      interpret=interpret,
+                                      early_exit_eps=early_exit_eps)
+    if early_exit:
+        return out
+    return out, jnp.asarray(iterations * (L // l_tile), jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
                                              "l_tile", "stream_dtype",
-                                             "interpret"))
+                                             "interpret", "early_exit_eps"))
 def dynamic_routing_procedure_fused(u_hat: jax.Array, *, iterations: int = 3,
                                     use_approx: bool = False,
                                     l_tile: int | None = None,
                                     stream_dtype: str = "fp32",
-                                    interpret: bool = True) -> jax.Array:
+                                    interpret: bool = True,
+                                    early_exit_eps: float | None = None
+                                    ) -> jax.Array:
     """Whole-procedure megakernel (DESIGN.md §Procedure-fused).
 
     u_hat: (B, L, H, C) -> v: (B, H, C).  One pallas_call for all
     iterations: b/v/s never cross the off-chip boundary, squash runs
     in-kernel, û streams lane-packed (B, L, H·C) at ``stream_dtype``
-    ("fp32" | "bf16"; accumulation is always fp32).
+    ("fp32" | "bf16" | "int8"; accumulation is always fp32).  "int8"
+    quantizes û per L-tile (symmetric scale, :func:`quantize_u_stream`)
+    and dequantizes in-kernel — the quarter-DMA deep-edge tier.
+    ``early_exit_eps`` skips the Eq.4/Eq.5 work of L-tiles whose logit
+    update has converged (‖Δb‖∞ < ε after iteration 0); ε=0 is
+    bit-identical to the fixed grid (DESIGN.md §Quantized-routing).  Use
+    :func:`dynamic_routing_procedure_stats` to also get the
+    effective-tile-iterations counter.
     """
-    u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
-    B, L, H, C = u_hat.shape
-    if l_tile is None:
-        l_tile = procedure_l_tile(B, L, H, C, stream_dtype)
-    return routing_procedure_fused(u_hat, iterations=iterations,
-                                   l_tile=l_tile, use_approx=use_approx,
-                                   interpret=interpret)
+    v, _ = _procedure_call(u_hat, iterations, use_approx, l_tile,
+                           stream_dtype, interpret, early_exit_eps)
+    return v
+
+
+@functools.partial(jax.jit, static_argnames=("iterations", "use_approx",
+                                             "l_tile", "stream_dtype",
+                                             "interpret", "early_exit_eps"))
+def dynamic_routing_procedure_stats(u_hat: jax.Array, *, iterations: int = 3,
+                                    use_approx: bool = False,
+                                    l_tile: int | None = None,
+                                    stream_dtype: str = "fp32",
+                                    interpret: bool = True,
+                                    early_exit_eps: float | None = None):
+    """:func:`dynamic_routing_procedure_fused` plus the work counter.
+
+    Returns (v (B, H, C), effective_tile_iterations int32) — the number of
+    (iteration, L-tile) grid cells that did Eq.4/Eq.5 work.  Without early
+    exit this is the fixed-grid constant iterations · L/l_tile; with
+    ``early_exit_eps`` > 0 it is the measured data-dependent work, the
+    quantity ``dma_bytes_per_call(early_exit_work_fraction=...)`` models.
+    """
+    return _procedure_call(u_hat, iterations, use_approx, l_tile,
+                           stream_dtype, interpret, early_exit_eps)
 
 
 # ---------------------------------------------------------------------------
@@ -385,6 +544,12 @@ def dynamic_routing_procedure_train(u_hat: jax.Array, *, iterations: int = 3,
     approximations have no derivative); the Router refuses
     ``differentiable=True`` + ``use_approx`` for this reason.
     """
+    if stream_dtype == "int8":
+        raise ValueError(
+            "stream_dtype='int8' has no custom VJP: per-tile quantization "
+            "rounds û (round-to-nearest has no derivative) and the backward "
+            "megakernel has no dequant path (DESIGN.md §Quantized-routing); "
+            "train at 'fp32'/'bf16' and serve int8")
     u_hat = u_hat.astype(STREAM_DTYPES[stream_dtype])
     B, L, H, C = u_hat.shape
     if l_tile is None:

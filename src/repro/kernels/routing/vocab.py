@@ -13,8 +13,11 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 # û streaming dtypes on the pallas backend: accumulation is always fp32;
-# bf16 halves the DMA bytes of the only O(B·L·H·C) operand.
-STREAM_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16}
+# bf16 halves the DMA bytes of the only O(B·L·H·C) operand, int8 quarters
+# them (per-L-tile symmetric scale, dequantized in-kernel — the "deep edge"
+# tier, DESIGN.md §Quantized-routing).  int8 is procedure-megakernel-only
+# and inference-only; ops.resolve_fusion / router._validate enforce both.
+STREAM_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 # RouterSpec.fusion vocabulary (DESIGN.md §Procedure-fused): "auto" resolves
 # to the megakernel when the plan is shard-local and the VMEM model fits.

@@ -272,6 +272,175 @@ def test_dma_model_stage_split_fold():
         rt_ops.dma_bytes_per_call(B, L, H, C, form="procedure", fold=True)
 
 
+# ---------------------------------------------------------------------------
+# deep-edge tier: int8 û streaming + per-capsule early exit
+# (DESIGN.md §Quantized-routing; parity sweeps live in tests/test_quant.py)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.integers(1, 4), lt=st.sampled_from([16, 32]),
+       nl=st.integers(2, 4), iters=st.integers(1, 4),
+       stream_dtype=st.sampled_from(["fp32", "bf16", "int8"]))
+def test_property_early_exit_eps0_bit_identical(b, lt, nl, iters,
+                                                stream_dtype):
+    """ε = 0 early exit is BIT-identical to the fixed-grid megakernel for
+    every stream dtype: ‖Δb‖∞ < 0 is never true, so no tile ever freezes
+    and the frozen-c scratch round-trip (f32, exact) reproduces the same
+    fp32 op sequence.  Exact equality, not allclose — that is the
+    acceptance criterion."""
+    L = lt * nl
+    key = jax.random.PRNGKey(b * 131 + L + iters)
+    u_hat = jax.random.normal(key, (b, L, 6, 8))
+    base = rt_ops.dynamic_routing_procedure_fused(
+        u_hat, iterations=iters, l_tile=lt, stream_dtype=stream_dtype)
+    v0, eff0 = rt_ops.dynamic_routing_procedure_stats(
+        u_hat, iterations=iters, l_tile=lt, stream_dtype=stream_dtype,
+        early_exit_eps=0.0)
+    assert int(eff0) == iters * nl          # full fixed-grid work
+    assert np.array_equal(np.asarray(v0), np.asarray(base)), (
+        np.abs(np.asarray(v0) - np.asarray(base)).max())
+
+
+@pytest.mark.parametrize("fusion", ["auto", "procedure"])
+@pytest.mark.parametrize("stream_dtype", ["fp32", "bf16", "int8"])
+def test_early_exit_eps0_bit_identical_through_router(key, fusion,
+                                                      stream_dtype):
+    """Same bit-identity through the Router across fusion x stream_dtype
+    (both fusion levels that can reach the megakernel; the shape is small
+    enough that the early-exit VMEM model picks the same l_tile, which the
+    resolved plans pin down)."""
+    from repro.core.router import RouterSpec, build_router
+    u_hat = jax.random.normal(key, (2, 96, 6, 8))
+    spec = RouterSpec(algorithm="dynamic", backend="pallas",
+                      fusion=fusion, stream_dtype=stream_dtype)
+    base = build_router(spec)
+    ee = build_router(spec._replace(early_exit_eps=0.0))
+    assert base.resolve(u_hat).fusion == ee.resolve(u_hat).fusion \
+        == "procedure"
+    assert np.array_equal(np.asarray(base(u_hat)), np.asarray(ee(u_hat)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(b=st.integers(1, 4), lt=st.sampled_from([16, 32]),
+       nl=st.integers(2, 4), iters=st.integers(2, 3),
+       scale=st.floats(0.25, 4.0))
+def test_property_early_exit_monotone_work(b, lt, nl, iters, scale):
+    """effective-tile-iterations is monotone non-increasing in ε.
+
+    iterations <= 3 makes this exact, not statistical: every tile works
+    at it=0 (flags start clear) and at it=1 computes from ε-independent
+    state (flags are only *set* at it >= 1, affecting it >= 2), so the
+    set of tiles frozen after it=1 — the only skips a 3-iteration grid
+    can have — is nested across ε by construction.  The endpoints are
+    exact too: ε=0 is the full grid and ε=∞-ish freezes everything after
+    it=1 (2·n_l_tiles cells — every tile must work twice before its
+    first ‖Δb‖ check can fire, since it=0's v_prev=0 makes Δb ≡ 0)."""
+    L = lt * nl
+    key = jax.random.PRNGKey(b * 977 + L + iters)
+    u_hat = scale * jax.random.normal(key, (b, L, 6, 8))
+    ladder = [0.0, 1e-3, 1e-1, 1.0, 10.0, 1e6]
+    effs = []
+    for eps in ladder:
+        _, eff = rt_ops.dynamic_routing_procedure_stats(
+            u_hat, iterations=iters, l_tile=lt, early_exit_eps=eps)
+        effs.append(int(eff))
+    assert all(a >= b_ for a, b_ in zip(effs, effs[1:])), (ladder, effs)
+    assert effs[0] == iters * nl
+    assert effs[-1] == min(iters, 2) * nl
+
+
+def test_early_exit_small_eps_near_parity(key):
+    """A genuinely-converged freeze is benign: at a small ε the skipped
+    logit updates are < ε per element per iteration, so v drifts by at
+    most the softmax/squash amplification of that — orders below the
+    lossy-stream tolerances."""
+    u_hat = jax.random.normal(key, (2, 128, 6, 8))
+    base = rt_ops.dynamic_routing_procedure_fused(u_hat, l_tile=32)
+    v, _ = rt_ops.dynamic_routing_procedure_stats(
+        u_hat, l_tile=32, early_exit_eps=1e-4)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(base), atol=1e-3)
+
+
+def test_early_exit_rejects_bad_eps(key):
+    u_hat = jax.random.normal(key, (2, 64, 6, 8))
+    with pytest.raises(ValueError, match="early_exit_eps must be >= 0"):
+        rt_ops.dynamic_routing_procedure_fused(u_hat, l_tile=32,
+                                               early_exit_eps=-0.5)
+
+
+def test_dma_model_int8_and_early_exit():
+    """The deep-edge rows of the DMA model (bench_rp_speedup cross-checks
+    the same invariants per shape): int8 quarters the û stream and only
+    the û stream; early_exit_work_fraction scales the û stream and only
+    the û stream; both are procedure-form-only."""
+    B, L, H, C, iters = 4, 128, 10, 16, 3
+    pr = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure")
+    i8 = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure",
+                                   stream_dtype="int8")
+    assert i8["u_hat_stream_bytes"] * 4 == pr["u_hat_stream_bytes"]
+    assert i8["roundtrip_bytes"] == pr["roundtrip_bytes"]  # fp32 roundtrip
+    ee = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure",
+                                   early_exit_work_fraction=0.5)
+    assert ee["u_hat_stream_bytes"] * 2 == pr["u_hat_stream_bytes"]
+    assert ee["roundtrip_bytes"] == pr["roundtrip_bytes"]
+    assert ee["early_exit_work_fraction"] == 0.5
+    # fraction 1.0 (ε=0 / nothing converged) is exactly the fixed grid
+    full = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure",
+                                     early_exit_work_fraction=1.0)
+    assert full["total_bytes"] == pr["total_bytes"]
+    # int8 x early-exit compose: both knobs hit the same û term
+    both = rt_ops.dma_bytes_per_call(B, L, H, C, iters, form="procedure",
+                                     stream_dtype="int8",
+                                     early_exit_work_fraction=0.5)
+    assert both["u_hat_stream_bytes"] * 8 == pr["u_hat_stream_bytes"]
+    with pytest.raises(ValueError, match="procedure-megakernel tier"):
+        rt_ops.dma_bytes_per_call(B, L, H, C, form="iteration",
+                                  stream_dtype="int8")
+    with pytest.raises(ValueError, match="forward procedure"):
+        rt_ops.dma_bytes_per_call(B, L, H, C, form="iteration",
+                                  early_exit_work_fraction=0.5)
+    with pytest.raises(ValueError, match="in \\(0, 1\\]"):
+        rt_ops.dma_bytes_per_call(B, L, H, C, form="procedure",
+                                  early_exit_work_fraction=1.5)
+
+
+def test_vmem_model_early_exit_and_int8():
+    """procedure_vmem_bytes grows by exactly the frozen-c scratch + flag
+    terms under early exit; the int8 tile pick can never be smaller than
+    the fp32 pick (1-byte rows fit more VMEM)."""
+    B, L, H, C, lt = 4, 128, 10, 16, 32
+    base = rt_ops.procedure_vmem_bytes(B, L, H, C, lt)
+    ee = rt_ops.procedure_vmem_bytes(B, L, H, C, lt, early_exit=True)
+    assert ee - base == L * H * 4 + (L // lt) * 4
+    i8 = rt_ops.procedure_vmem_bytes(B, L, H, C, lt, "int8")
+    assert i8 < base
+    assert (rt_ops.procedure_l_tile(B, L, H, C, "int8")
+            >= rt_ops.procedure_l_tile(B, L, H, C, "fp32"))
+
+
+def test_resolve_fusion_deep_edge_forms():
+    """int8 / early-exit resolve "auto" to "procedure" even for the
+    VMEM-overfull shape that fp32 auto sends to the iteration kernel, and
+    raise for the forms that cannot host them."""
+    big = (512, 1024, 32, 128)
+    assert rt_ops.resolve_fusion("auto", big, "fp32") == "iteration"
+    assert rt_ops.resolve_fusion("auto", big, "int8") == "procedure"
+    assert rt_ops.resolve_fusion("auto", big, "fp32",
+                                 early_exit=True) == "procedure"
+    # no shape needed: the deep-edge resolution is unconditional
+    assert rt_ops.resolve_fusion("auto", None, "int8") == "procedure"
+    with pytest.raises(ValueError, match="fusion='auto' or 'procedure'"):
+        rt_ops.resolve_fusion("iteration", big, "int8")
+    with pytest.raises(ValueError, match="fusion='auto' or 'procedure'"):
+        rt_ops.resolve_fusion("iteration", big, "fp32", early_exit=True)
+    with pytest.raises(ValueError, match="shard-local"):
+        rt_ops.resolve_fusion("auto", big, "int8", sharded=True)
+    with pytest.raises(ValueError, match="shard-local"):
+        rt_ops.resolve_fusion("auto", big, "fp32", sharded=True,
+                              early_exit=True)
+
+
 def test_stage_update_fold_matches_split(key):
     """routing_stage_update_fold == routing_stage_update + host softmax
     (the folded Eq.5 path the sharded form takes when B/H are unsharded)."""

@@ -1,0 +1,131 @@
+"""int8 û streaming: quantization round-trip + parity sweep
+(DESIGN.md §Quantized-routing).
+
+The deep-edge tier is lossy by design, so its tests are calibrated, not
+exact: the per-dtype forward tolerance lives in tests/_gradcheck.py
+(``FWD_ATOL``) next to the gradient table, and the end-to-end accuracy
+gate lives in benchmarks/bench_accuracy.py (top-1 within 0.5pt of fp32)
+— per ROADMAP item 1, int8 is gated by accuracy, not the 1e-5 parity
+gate of the exact stream dtypes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _gradcheck import FWD_ATOL, fwd_tol
+from repro.core import routing as routing_lib
+from repro.core.router import RouterSpec, build_router
+from repro.kernels.routing import ops as rt_ops
+from repro.kernels.routing.kernel import routing_procedure_fused
+
+
+def _votes(key, B=2, L=96, H=6, C=8):
+    return jax.random.normal(key, (B, L, H, C), jnp.float32)
+
+
+# --- quantization round-trip -----------------------------------------------
+
+def test_quantize_roundtrip_scale(key):
+    u = _votes(key, B=2, L=96)
+    l_tile = 32
+    q, scales = rt_ops.quantize_u_stream(u, l_tile)
+    assert q.dtype == jnp.int8 and q.shape == u.shape
+    assert scales.dtype == jnp.float32 and scales.shape == (3, 1)
+    qn = np.asarray(q, np.int32)
+    assert np.abs(qn).max() <= 127
+    un = np.asarray(u).reshape(2, 3, l_tile, 6, 8)
+    sn = np.asarray(scales).ravel()
+    # the scale IS the per-tile symmetric scheme: absmax / 127
+    np.testing.assert_allclose(
+        sn, np.abs(un).max(axis=(0, 2, 3, 4)) / 127.0, rtol=1e-6)
+    # dequant error of round-to-nearest codes <= scale/2 per element
+    dq = qn.reshape(2, 3, l_tile, 6, 8) * sn[None, :, None, None, None]
+    err = np.abs(dq - un)
+    assert (err <= sn[None, :, None, None, None] / 2 + 1e-7).all(), err.max()
+
+
+def test_quantize_zero_tile_no_nan():
+    u = jnp.zeros((1, 64, 4, 4), jnp.float32)
+    q, scales = rt_ops.quantize_u_stream(u, 32)
+    assert np.asarray(q).max() == 0 and np.asarray(q).min() == 0
+    # the all-zero tile takes the 1/127 scale floor — finite, never NaN
+    np.testing.assert_allclose(np.asarray(scales), 1.0 / 127.0, rtol=1e-6)
+
+
+def test_quantize_rejects_non_divisible_tile(key):
+    with pytest.raises(ValueError, match="not divisible"):
+        rt_ops.quantize_u_stream(_votes(key, L=96), 40)
+
+
+# --- parity sweep: iterations x non-divisible L x plans --------------------
+
+@pytest.mark.parametrize("iters", [1, 2, 3])
+@pytest.mark.parametrize("L", [64, 96, 136])   # 136: no divisor 128 -> 68
+@pytest.mark.parametrize("plan", [None, "auto"])
+def test_int8_parity_sweep(key, iters, L, plan):
+    u = _votes(jax.random.fold_in(key, 17 * iters + L), L=L)
+    want = routing_lib.dynamic_routing(
+        u, routing_lib.RoutingConfig(iterations=iters))
+    router = build_router(
+        RouterSpec(algorithm="dynamic", backend="pallas", iterations=iters,
+                   stream_dtype="int8"), plan)
+    resolved = router.resolve(u)
+    # deep-edge tier always resolves to the (shard-local) megakernel
+    assert tuple(resolved) == ()
+    assert resolved.fusion == "procedure"
+    assert resolved.stream_dtype == "int8"
+    np.testing.assert_allclose(np.asarray(router(u)), np.asarray(want),
+                               atol=fwd_tol("int8"), rtol=0.0)
+
+
+def test_int8_ops_path_parity_and_fp32_not_vacuous(key):
+    """Direct ops entry point hits the same tolerance — and the fp32 arm
+    of the same call is ~3 orders tighter, so FWD_ATOL['int8'] is doing
+    real calibrated work, not masking a broken kernel."""
+    u = _votes(key)
+    want = routing_lib.dynamic_routing(u, routing_lib.RoutingConfig())
+    v_i8 = rt_ops.dynamic_routing_procedure_fused(u, stream_dtype="int8")
+    v_f32 = rt_ops.dynamic_routing_procedure_fused(u, stream_dtype="fp32")
+    d_i8 = float(jnp.max(jnp.abs(v_i8 - want)))
+    d_f32 = float(jnp.max(jnp.abs(v_f32 - want)))
+    assert d_i8 <= FWD_ATOL["int8"]
+    assert d_f32 <= FWD_ATOL["fp32"]
+    assert d_f32 < d_i8
+
+
+def test_int8_stream_no_f32_copy_into_kernel(key):
+    """The pallas operand is the int8 codes: once quantized, no full-size
+    fp32 û copy may appear in the kernel-call jaxpr (the int8 point of
+    streaming is the 1-byte itemsize; mirrors the bf16 no-promotion
+    test)."""
+    u = _votes(key, B=2, L=64)
+    q, scales = rt_ops.quantize_u_stream(u, 32)
+    jaxpr = str(jax.make_jaxpr(
+        lambda qq, ss: routing_procedure_fused(qq, ss, l_tile=32))(q, scales))
+    assert "f32[2,64,6,8]" not in jaxpr
+    assert "f32[2,64,48]" not in jaxpr
+    assert "i8[2,64,48]" in jaxpr
+
+
+def test_int8_requires_scales_and_matching_shape(key):
+    u = _votes(key, L=64)
+    q, scales = rt_ops.quantize_u_stream(u, 32)
+    with pytest.raises(ValueError, match="per-tile scales"):
+        routing_procedure_fused(q, l_tile=32)
+    with pytest.raises(ValueError, match="scales shape"):
+        routing_procedure_fused(q, scales[:1], l_tile=32)
+    with pytest.raises(ValueError, match="int8 codes"):
+        routing_procedure_fused(u, scales, l_tile=32)
+
+
+def test_int8_train_path_rejected(key):
+    """int8 is inference-only: quantization rounding has no derivative and
+    the backward megakernel has no dequant path (the Router refuses
+    differentiable x int8 at build; the direct ops call must too)."""
+    u = _votes(key)
+    with pytest.raises(ValueError, match="no custom VJP"):
+        rt_ops.dynamic_routing_procedure_train(u, stream_dtype="int8")
+    with pytest.raises(ValueError, match="no int8 form"):
+        rt_ops.dma_bytes_per_call(2, 96, 6, 8, form="procedure",
+                                  stream_dtype="int8", backward=True)

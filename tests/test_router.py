@@ -466,6 +466,74 @@ def test_fusion_and_stream_dtype_error_surface():
         build_router(RouterSpec(stream_dtype="bf16"))         # jnp backend
 
 
+def test_deep_edge_error_surface():
+    """int8 and early-exit composition limits are build-time errors with
+    actionable messages (DESIGN.md §Quantized-routing)."""
+    mesh = compat.make_mesh((1,), ("x",))
+    pall = RouterSpec(algorithm="dynamic", backend="pallas")
+    # early_exit_eps value / backend / algorithm surface
+    with pytest.raises(ValueError, match="must be a float >= 0"):
+        build_router(pall._replace(early_exit_eps=-1.0))
+    with pytest.raises(ValueError, match="must be a float >= 0"):
+        build_router(pall._replace(early_exit_eps=True))
+    with pytest.raises(ValueError, match="pallas-backend knob"):
+        build_router(RouterSpec(early_exit_eps=0.1))          # jnp backend
+    with pytest.raises(ValueError, match="pallas-backend knob"):
+        build_router(RouterSpec(algorithm="em", backend="pallas",
+                                early_exit_eps=0.1))
+    # both deep-edge knobs need the procedure megakernel ...
+    with pytest.raises(ValueError, match="procedure megakernel"):
+        build_router(pall._replace(fusion="iteration", early_exit_eps=0.1))
+    with pytest.raises(ValueError, match="procedure megakernel"):
+        build_router(pall._replace(fusion="iteration", stream_dtype="int8"))
+    # ... which is shard-local ...
+    sharded = ExecutionPlan(mesh=mesh, axes=(("L", "x"),))
+    with pytest.raises(ValueError, match="shard-local"):
+        build_router(pall._replace(early_exit_eps=0.1), sharded)
+    with pytest.raises(ValueError, match="shard-local"):
+        build_router(pall._replace(stream_dtype="int8"), sharded)
+    # ... and forward-only: the recompute-b VJP replays the fixed grid
+    # and has no dequant path
+    with pytest.raises(ValueError, match="early_exit_eps=None"):
+        build_router(pall._replace(differentiable=True, early_exit_eps=0.1))
+    with pytest.raises(ValueError, match="serve int8"):
+        build_router(pall._replace(differentiable=True, stream_dtype="int8"))
+
+
+def test_deep_edge_resolved_plan_roundtrip(key):
+    """plan='auto' with int8 + early_exit_eps resolves shard-local to the
+    procedure megakernel and ResolvedPlan reports both knobs — even
+    before the votes shape is known (the deep-edge resolution is
+    unconditional), and even when a mesh is available to the planner."""
+    u_hat = jax.random.normal(key, (2, 96, 6, 8))
+    want = routing.dynamic_routing(u_hat, routing.RoutingConfig())
+    spec = RouterSpec(algorithm="dynamic", backend="pallas",
+                      stream_dtype="int8", early_exit_eps=1e-3)
+    for plan in (None, "auto"):
+        router = build_router(spec, plan)
+        for resolved in (router.resolve(), router.resolve(u_hat)):
+            assert tuple(resolved) == ()
+            assert resolved.fusion == "procedure"
+            assert resolved.stream_dtype == "int8"
+            assert resolved.differentiable is False
+            assert resolved.early_exit_eps == 1e-3
+        assert "early_exit_eps=0.001" in repr(resolved)
+        np.testing.assert_allclose(np.asarray(router(u_hat)),
+                                   np.asarray(want), atol=6e-2, rtol=0.0)
+    # exact-dtype early exit alone: same resolution, fp32 stream reported
+    ee = build_router(RouterSpec(algorithm="dynamic", backend="pallas",
+                                 early_exit_eps=0.0), "auto")
+    r = ee.resolve(u_hat)
+    assert (r.fusion, r.stream_dtype, r.early_exit_eps) == \
+        ("procedure", "fp32", 0.0)
+    # the non-deep-edge paths keep reporting early_exit_eps=None
+    assert build_router(RouterSpec()).resolve(u_hat).early_exit_eps is None
+    mesh = compat.make_mesh((1,), ("x",))
+    sh = build_router(RouterSpec(backend="pallas"),
+                      ExecutionPlan(mesh=mesh, axes=(("L", "x"),)))
+    assert sh.resolve(u_hat).early_exit_eps is None
+
+
 def test_legacy_fused_sharded_delegates(u_hat):
     """RoutingConfig(fused=True) + sharded dims now runs the sharded-fused
     path through the legacy shims (previously a ValueError)."""
