@@ -15,7 +15,14 @@ multi-input (votes, a_in) pipeline stage hand-off.  The fleet arm
 waves and bounded queues, gating that goodput (deadline-met completions)
 degrades gracefully under overload (>= 80% of the 1.0-load goodput) and
 that shed work comes from the doomed pool — expired requests first, then
-the free class; unexpired gold work is never shed.
+the free class; unexpired gold work is never shed.  The chaos arm
+(DESIGN.md §Faults) re-runs the 1.0-load fleet cell under a deterministic
+fault schedule — transient wave exceptions, one NaN-corrupted wave, one
+replica crash mid-backlog — through ``runtime.faults``'s wave_fn seam,
+gating that no request is lost (extended per-tenant invariant at drain,
+``failed == 0``), that the crash was healed (one burial, evacuated ==
+adopted), that the NaN wave was quarantined (guard_trips >= 1), and that
+goodput stays >= 80% of the fault-free 1.0-load cell.
 Reported per (arm, load) cell: median/p90 request latency (queue +
 compute), throughput, and shed count (plus goodput and the per-tenant
 breakdown for the fleet arm).  Correctness gates assert pipelined == unpipelined class
@@ -46,7 +53,7 @@ from repro.runtime.caps_serve import (CapsServer, ServeConfig, ServeMetrics,
 from repro.runtime.elastic import ElasticPolicy
 
 ARMS = ("pipelined", "unpipelined", "async", "em_pipelined",
-        "em_unpipelined", "fleet")
+        "em_unpipelined", "fleet", "chaos")
 
 
 def _setup():
@@ -181,14 +188,16 @@ def _fleet_tick_s(params, caps_cfg, microbatch: int, n_micro: int,
 
 def run_cell_fleet(params, caps_cfg, microbatch: int, n_micro: int,
                    total: int, load: float, wave_cache: dict,
-                   tick_s: float) -> dict:
+                   tick_s: float, wave_wrap=None) -> dict:
     """One (fleet, offered-load) cell: two tenant classes — "gold"
     (higher priority, tighter SLO) and "free" — split the offered load
     over a 2-replica CapsFleet with deadline-ordered waves and bounded
     replica queues (DESIGN.md §Fleet).  Under overload the shed policy
     must fall on free/expired requests and goodput (deadline-met
     completions) must degrade gracefully, not collapse — the gates in
-    ``main``."""
+    ``main``.  ``wave_wrap`` is the chaos seam: the chaos arm passes
+    ``faults.fleet_wrap(...)`` here and the cell runs the identical
+    workload under the injected schedule (DESIGN.md §Faults)."""
     lanes = microbatch * n_micro
     # 2.5 waves of queue per replica: deep enough that the 1.5x overload
     # backlog mostly queues (goodput degrades gracefully), shallow enough
@@ -200,7 +209,7 @@ def run_cell_fleet(params, caps_cfg, microbatch: int, n_micro: int,
                TenantPolicy("free", slo_s=12 * tick_s, priority=0)]
     fleet = CapsFleet(params, caps_cfg, tenants=tenants, cfg=cfg,
                       policy=ElasticPolicy(min_replicas=2, max_replicas=2),
-                      wave_cache=wave_cache)
+                      wave_cache=wave_cache, wave_wrap=wave_wrap)
     ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
                               caps_cfg.num_h_caps)
     rng = np.random.default_rng(0)
@@ -234,19 +243,60 @@ def run_cell_fleet(params, caps_cfg, microbatch: int, n_micro: int,
     elapsed = time.perf_counter() - t0
     s = fleet.summary()
     assert s["pending"] == 0, s
-    assert s["submitted"] == s["completed"] + s["shed"], s
+    assert s["submitted"] == s["completed"] + s["shed"] + s["failed"], s
     for name, t in s["per_tenant"].items():
-        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
-            (name, t)
+        assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                                  + t["pending"]), (name, t)
     return {"offered_load": load, "requests": s["completed"],
             "waves": s["waves"], "padded_lanes": s["padded_lanes"],
             "shed": s["shed"], "shed_expired": s["shed_expired"],
             "goodput": s["goodput"], "replicas": s["replicas"],
+            "failed": s["failed"], "retried": s["retried"],
+            "requeued": s["requeued"], "guard_trips": s["guard_trips"],
+            "wave_errors": s["wave_errors"],
+            "evacuated": s["evacuated"], "adopted": s["adopted"],
+            "burials": len(s["health_events"]),
             "per_tenant": s["per_tenant"],
             "latency": {"median_s": s["p50_latency_s"],
                         "p90_s": s["p90_latency_s"]},
             "throughput_rps": (s["completed"] / elapsed
                                if elapsed > 0 else None)}
+
+
+def chaos_plans(faults):
+    """The chaos arm's deterministic schedule (exceptions + NaN + one
+    replica crash): pinned events, not sampled rates, so every run of the
+    bench injects exactly this — replica r0 survives a transient error,
+    then crashes mid-backlog (burial + re-dispatch under load); replica
+    r1 produces one NaN wave (guard quarantine) and one more transient
+    error."""
+    return {
+        "default/r0": faults.FaultPlan((faults.FaultEvent(1, "error"),
+                                        faults.FaultEvent(3, "crash"))),
+        "default/r1": faults.FaultPlan((faults.FaultEvent(2, "corrupt"),
+                                        faults.FaultEvent(5, "error"))),
+    }
+
+
+def chaos_gates(chaos_row: dict, fleet_rows: list, smoke: bool) -> None:
+    """The robustness gates (DESIGN.md §Faults): every fault mode fired
+    and was healed — zero lost requests (failed == 0 on this schedule:
+    transients retry, the crash evacuates), exactly one burial with the
+    whole backlog adopted, the NaN wave quarantined — and, at full scale,
+    goodput >= 80% of the fault-free 1.0-load cell."""
+    r = chaos_row
+    assert r["failed"] == 0, f"chaos lost requests to failure: {r}"
+    assert r["wave_errors"] >= 3, f"injected faults did not all fire: {r}"
+    assert r["retried"] >= 2, f"transient faults were not retried: {r}"
+    assert r["guard_trips"] >= 1, f"NaN wave was not quarantined: {r}"
+    assert r["burials"] == 1, f"crash was not buried exactly once: {r}"
+    assert r["evacuated"] == r["adopted"], \
+        f"evacuated backlog not fully adopted: {r}"
+    if not smoke:
+        base = {b["offered_load"]: b for b in fleet_rows}[1.0]
+        assert r["goodput"] >= 0.8 * base["goodput"], \
+            f"chaos goodput collapsed: {r['goodput']} < " \
+            f"0.8 * {base['goodput']}"
 
 
 def fleet_gates(rows: list) -> None:
@@ -308,11 +358,12 @@ def main():
     rows = {arm: [] for arm in ARMS}
     print("arm,offered_load,requests,waves,padded_lanes,shed,"
           "latency_p50_s,latency_p90_s,throughput_rps")
+    wave_cache: dict = {}
+    tick_s = None
     for arm in ARMS:
         if arm == "fleet":
             # tenants x offered-load sweep over a 2-replica fleet; 1.5x
             # load is the overload point the degradation gates inspect
-            wave_cache: dict = {}
             tick_s = _fleet_tick_s(params, caps_cfg, microbatch, n_micro,
                                    wave_cache)
             for load in fleet_loads:
@@ -321,6 +372,17 @@ def main():
                                          wave_cache, tick_s))
             if not common.smoke():
                 fleet_gates(rows[arm])
+            continue
+        if arm == "chaos":
+            # the 1.0-load fleet cell, re-run under the deterministic
+            # fault schedule (exceptions + NaN + one replica crash);
+            # chaos code loads only here — production arms never touch it
+            from repro.runtime import faults
+            emit(arm, run_cell_fleet(
+                params, caps_cfg, microbatch, n_micro, fleet_total, 1.0,
+                wave_cache, tick_s,
+                wave_wrap=faults.fleet_wrap(chaos_plans(faults))))
+            chaos_gates(rows[arm][0], rows["fleet"], common.smoke())
             continue
         server = make_server(params, caps_cfg, arm,
                              _serve_cfg(arm, microbatch, n_micro))
@@ -343,6 +405,12 @@ def main():
                       "tenants": {"gold": {"priority": 1, "slo_waves": 8},
                                   "free": {"priority": 0,
                                            "slo_waves": 12}}},
+            "chaos": {"offered_load": 1.0,
+                      "schedule": "pinned: r0 error@1 crash@3, "
+                                  "r1 corrupt@2 error@5",
+                      "gates": ["failed == 0", "burials == 1",
+                                "evacuated == adopted", "guard_trips >= 1",
+                                "goodput >= 0.8x fault-free @ 1.0"]},
             "outputs_identical": ok,
             "max_abs_prob_delta": diff,
             "em_outputs_identical": em_ok,

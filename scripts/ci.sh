@@ -184,6 +184,13 @@ EOF
   PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke \
     --replicas 2 --tenants 2 --slo-ms 5000
 
+  echo "== smoke: repro.launch.serve_caps --smoke --chaos (fault injection) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --chaos
+
+  echo "== smoke: repro.launch.serve_caps --smoke --chaos --replicas 2 (self-healing fleet) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --chaos \
+    --replicas 2 --tenants 2 --slo-ms 5000
+
   echo "== smoke: benchmarks.run --smoke --only serving (JSON artifact) =="
   PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only serving
   python - <<'EOF'
@@ -228,12 +235,29 @@ for c in cells:
     for name, t in pt.items():
         for k in ("submitted", "completed", "shed", "goodput", "pending"):
             assert k in t, (name, k, t)
-        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
-            (name, t)
+        assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                                  + t["pending"]), (name, t)
     assert c["shed"] == sum(t["shed"] for t in pt.values()), c
+    assert c["failed"] == 0 and c["wave_errors"] == 0, c  # fault-free arm
+
+# chaos arm: the 1.0-load fleet cell under the injected fault schedule
+# (DESIGN.md §Faults) — every fault fired, everything healed, nothing lost
+assert "chaos" in d["arms"], sorted(d["arms"])
+(cc,) = d["arms"]["chaos"]
+assert cc["failed"] == 0, cc                      # zero lost requests
+assert cc["wave_errors"] >= 3 and cc["retried"] >= 2, cc
+assert cc["guard_trips"] >= 1, cc                 # NaN wave quarantined
+assert cc["burials"] == 1, cc                     # replica crash healed
+assert cc["evacuated"] == cc["adopted"] > 0, cc   # backlog re-dispatched
+for name, t in cc["per_tenant"].items():
+    assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                              + t["pending"]), (name, t)
+    assert t["pending"] == 0, (name, t)
 print("BENCH_serving.json OK (strict JSON):", len(d["arms"]), "arms x",
       len(d["offered_loads"]), "offered-load points + fleet sweep",
-      d["fleet"]["offered_loads"])
+      d["fleet"]["offered_loads"], "+ chaos arm",
+      {k: cc[k] for k in ("wave_errors", "retried", "guard_trips",
+                          "burials")})
 EOF
 fi
 

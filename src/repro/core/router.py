@@ -131,6 +131,17 @@ class RouterSpec(NamedTuple):
         return self._replace(options=tuple(sorted(merged.items())))
 
 
+def reference_spec(spec: RouterSpec) -> RouterSpec:
+    """The jnp reference twin of ``spec``: same algorithm, iterations and
+    options, but the pure-XLA backend with every pallas-only knob reset
+    (fusion/stream_dtype/early_exit/approx).  This is the fallback target
+    shared by the differentiable pallas path (VMEM non-fit, DESIGN.md
+    §Training) and the serving output guard's NaN/Inf quarantine
+    (runtime.caps_serve, DESIGN.md §Faults)."""
+    return spec._replace(backend="jnp", fusion="auto", stream_dtype="fp32",
+                         early_exit_eps=None, use_approx=False)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm registry
 # ---------------------------------------------------------------------------

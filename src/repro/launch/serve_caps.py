@@ -17,16 +17,25 @@ waves (``--slo-ms`` sets the per-request SLO), per-tenant accounting, and
 — when ``--max-replicas`` exceeds N — the elastic controller scaling the
 fleet between the two bounds.
 
+``--chaos`` arms deterministic fault injection (``repro.runtime.faults``,
+DESIGN.md §Faults): a seeded ``FaultPlan`` of wave exceptions and NaN
+corruption — plus a replica crash in fleet mode — runs against the
+hardened wave path, and the exit assertions prove the extended invariant
+(``submitted == completed + shed + failed``) held: no request is ever
+silently lost, only completed, shed, or failed-with-accounting.
+
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke --async
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke --chaos
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke \
-        --replicas 2 --tenants 2 --slo-ms 2000
+        --replicas 2 --tenants 2 --slo-ms 2000 --chaos
     PYTHONPATH=src python -m repro.launch.serve_caps \
         --network Caps-MN1 --requests 64 --pipeline software --plan auto \
         --algorithm em --async --submitters 4
 """
 import argparse
 import dataclasses
+import math
 import threading
 import time
 
@@ -38,8 +47,19 @@ from repro.core.router import RouterSpec
 from repro.data.synthetic import SyntheticCapsDataset
 from repro.models import capsnet
 from repro.runtime.caps_fleet import CapsFleet, TenantPolicy
-from repro.runtime.caps_serve import CapsServer, ServeConfig
+from repro.runtime.caps_serve import CapsServer, ServeConfig, make_wave_fn
 from repro.runtime.elastic import ElasticPolicy
+
+
+def chaos_plan(args, cfg: ServeConfig, faults, crash: bool):
+    """Seeded fault schedule sized to the run: enough scheduled waves to
+    cover the request count twice over (retries advance the call index),
+    with wave-exception and NaN-corruption rates per DESIGN.md §Faults
+    and — in fleet mode — one replica crash early in the run."""
+    n_waves = max(8, 2 * math.ceil(args.requests / cfg.wave_lanes) + 4)
+    return faults.FaultPlan.generate(
+        args.chaos_seed, n_waves, p_error=0.15, p_corrupt=0.1,
+        crash_wave=1 if crash else None)
 
 
 def arrival_schedule(total: int, mean_per_tick: float, seed: int = 0):
@@ -107,6 +127,12 @@ def run_fleet(args, caps_cfg, params, ds, cfg: ServeConfig, spec, schedule):
                for i in range(args.tenants)]
     max_replicas = (args.replicas if args.max_replicas is None
                     else args.max_replicas)
+    wave_wrap = None
+    if args.chaos:
+        from repro.runtime import faults   # chaos only: lazy, opt-in
+        crash = args.replicas > 1          # need a survivor to adopt
+        wave_wrap = faults.fleet_wrap(
+            {"default/r0": chaos_plan(args, cfg, faults, crash)})
     fleet = CapsFleet(
         params, caps_cfg, tenants=tenants,
         models={"default": (spec,
@@ -114,7 +140,8 @@ def run_fleet(args, caps_cfg, params, ds, cfg: ServeConfig, spec, schedule):
                                                 queue_order="deadline"))},
         policy=ElasticPolicy(min_replicas=args.replicas,
                              max_replicas=max_replicas),
-        control_interval_s=0.05)
+        control_interval_s=0.05,
+        wave_wrap=wave_wrap)
     print(f"fleet: {args.replicas}..{max_replicas} replicas x "
           f"{args.tenants} tenants, slo="
           f"{'none' if slo_s is None else f'{args.slo_ms:.0f} ms'}, "
@@ -137,14 +164,20 @@ def run_fleet(args, caps_cfg, params, ds, cfg: ServeConfig, spec, schedule):
     s = fleet.stop()
 
     assert s["pending"] == 0, s
-    assert s["submitted"] == s["completed"] + s["shed"], s
+    assert s["submitted"] == s["completed"] + s["shed"] + s["failed"], s
     assert s["submitted"] == args.requests, (s, args.requests)
     for name, t in s["per_tenant"].items():
-        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
-            (name, t)
+        assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                                  + t["pending"]), (name, t)
     print(f"served {s['completed']} requests in {s['waves']} waves across "
-          f"{s['replicas']} replicas ({s['shed']} shed, goodput "
-          f"{s['goodput']}, {len(fleet.completions)} completions)")
+          f"{s['replicas']} replicas ({s['shed']} shed, {s['failed']} "
+          f"failed, goodput {s['goodput']}, "
+          f"{len(fleet.completions)} completions)")
+    if args.chaos:
+        print(f"chaos: {s['wave_errors']} wave errors, {s['retried']} "
+              f"retried, {s['requeued']} requeued, {s['guard_trips']} guard "
+              f"trips, {s['evacuated']} evacuated -> {s['adopted']} adopted, "
+              f"{len(s['health_events'])} burials")
     for name, t in s["per_tenant"].items():
         print(f"  {name}: submitted {t['submitted']}, completed "
               f"{t['completed']}, shed {t['shed']}, goodput {t['goodput']}")
@@ -197,6 +230,14 @@ def main():
     ap.add_argument("--load", type=float, default=0.75,
                     help="offered load as a fraction of wave capacity "
                          "per tick")
+    ap.add_argument("--chaos", action="store_true",
+                    help="deterministic fault injection against the "
+                         "hardened wave path (runtime.faults, DESIGN.md "
+                         "§Faults): seeded wave exceptions + NaN "
+                         "corruption, plus a replica crash in fleet mode")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="FaultPlan.generate seed (same seed = same "
+                         "schedule, every run)")
     args = ap.parse_args()
 
     if args.smoke:
@@ -235,13 +276,21 @@ def main():
         run_fleet(args, caps_cfg, params, ds, cfg, spec, schedule)
         return
 
-    server = CapsServer(params, caps_cfg, spec=spec, cfg=cfg)
+    wave_fn = None
+    if args.chaos:
+        from repro.runtime import faults   # chaos only: lazy, opt-in
+        wave_fn = faults.chaos_wave_fn(
+            make_wave_fn(params, caps_cfg, spec, cfg),
+            chaos_plan(args, cfg, faults, crash=False))
+    server = CapsServer(params, caps_cfg, spec=spec, cfg=cfg,
+                        wave_fn=wave_fn)
     mode = (f"async x {args.submitters} submitters" if args.async_mode
             else "sync tick loop")
     print(f"{caps_cfg.name}: {args.requests} requests over "
           f"{len(schedule)} ticks (ragged), wave = {cfg.n_micro} x "
           f"{cfg.microbatch} lanes, pipeline={pipeline}, "
-          f"plan={args.plan}, algorithm={args.algorithm}, {mode}")
+          f"plan={args.plan}, algorithm={args.algorithm}, {mode}"
+          + (f", chaos seed {args.chaos_seed}" if args.chaos else ""))
 
     if args.async_mode:
         done = run_async(server, ds, schedule, max(1, args.submitters))
@@ -249,11 +298,17 @@ def main():
         done = run_sync(server, ds, schedule)
 
     s = server.metrics.summary()
-    assert s["submitted"] == s["completed"] + s["shed"], s
+    assert s["submitted"] == s["completed"] + s["shed"] + s["failed"], s
     assert server.pending() == 0, server.pending()
-    assert s["completed"] + s["shed"] == args.requests, (s, args.requests)
+    assert s["completed"] + s["shed"] + s["failed"] == args.requests, \
+        (s, args.requests)
     print(f"served {s['completed']} requests in {s['waves']} waves "
-          f"({s['padded_lanes']} padded lanes, {s['shed']} shed)")
+          f"({s['padded_lanes']} padded lanes, {s['shed']} shed, "
+          f"{s['failed']} failed)")
+    if args.chaos:
+        print(f"chaos: {s['wave_errors']} wave errors, {s['retried']} "
+              f"retried, {s['requeued']} requeued, {s['guard_trips']} "
+              f"guard trips")
     thr = s["throughput_rps"]
     print(f"latency p50 {_fmt_ms(s['p50_latency_s'])}, "
           f"p90 {_fmt_ms(s['p90_latency_s'])}; "

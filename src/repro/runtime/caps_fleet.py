@@ -30,14 +30,31 @@ deployment needs:
   and sets its ``serve_forever`` stop event — it finishes its queue, its
   metrics are retired into the fleet aggregate, and nothing is lost.
 
-The per-tenant accounting invariant (the fleet-level extension of
-DESIGN.md §Serving's):
+* **Replica health + self-healing** (DESIGN.md §Faults) — every replica is
+  continuously classified HEALTHY / DEGRADED / DEAD from its consecutive
+  wave failures, its watchdog p90-vs-median, its ``dead`` flag (set by a
+  ``ReplicaCrash``) and its driver thread's liveness.  ``health_check()``
+  — run by the controller thread each tick, and by the synchronous
+  ``step()``/``drain()`` drivers — buries a DEAD replica: its driver
+  stops, its queued backlog is **evacuated and re-dispatched** to the
+  least-loaded survivor (``CapsServer.evacuate``/``adopt``; failed with
+  accounting when no survivor exists), its metrics retire into the fleet
+  aggregate, and capacity recovers by restarting a replacement through
+  the ``ElasticController`` event log (``HealthPolicy.restart``).
 
-    submitted == completed + shed + pending        (per tenant, any time)
+The per-tenant accounting invariant (the fleet-level extension of
+DESIGN.md §Serving's, held through every injected fault):
+
+    submitted == completed + shed + failed + pending   (per tenant, any time)
 
 where ``shed`` counts both admission throttling (quota/rate) and
-replica-level back-pressure eviction, and ``pending`` is what's queued or
-in flight across all replicas.
+replica-level back-pressure eviction, ``failed`` counts requests dropped
+after ``ServeConfig.max_wave_retries`` exhausted wave retries (plus a
+dead replica's backlog when no survivor could adopt it), and ``pending``
+is what's queued or in flight across all replicas — evacuation/adoption
+cancel out fleet-wide because a re-dispatched request leaves the dead
+replica's books via ``evacuated`` exactly as it enters the survivor's via
+``adopted``.
 
     fleet = CapsFleet(params, caps_cfg,
                       tenants=[TenantPolicy("gold", slo_s=0.5, priority=1),
@@ -69,6 +86,44 @@ class FleetAdmissionError(RuntimeError):
     """``submit()`` under ``overflow="reject"``: the arrival exceeds the
     tenant's quota or rate allowance.  Admission is atomic — no fleet or
     replica counter moved except ``rejected``."""
+
+
+# Replica health states (DESIGN.md §Faults)
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DEAD = "dead"
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthPolicy:
+    """When a replica counts as DEGRADED or DEAD, and what to do about it.
+
+    degraded_failures: consecutive failed wave attempts before a replica
+                       is DEGRADED (still serving — retries are working).
+    dead_failures:     consecutive failures before it is declared DEAD and
+                       buried even without a ``ReplicaCrash`` (a replica
+                       that can't complete a wave isn't coming back).
+    slow_p90_factor:   watchdog p90 above ``factor × median`` also counts
+                       as DEGRADED (straggling, not failing).
+    restart:           bury a DEAD replica *and* start a replacement
+                       through the elastic controller so capacity
+                       recovers; False = capacity shrinks (backlog still
+                       re-dispatched to survivors, or failed with
+                       accounting when none remain).
+    """
+    degraded_failures: int = 1
+    dead_failures: int = 3
+    slow_p90_factor: float = 3.0
+    restart: bool = True
+
+    def __post_init__(self):
+        if not (1 <= self.degraded_failures <= self.dead_failures):
+            raise ValueError(
+                f"need 1 <= degraded_failures <= dead_failures; got "
+                f"{self.degraded_failures}..{self.dead_failures}")
+        if self.slow_p90_factor <= 1:
+            raise ValueError(f"slow_p90_factor must be > 1; got "
+                             f"{self.slow_p90_factor}")
 
 
 # ---------------------------------------------------------------------------
@@ -190,7 +245,11 @@ class CapsFleet:
                  strict_tenants: bool = False,
                  control_interval_s: float = 0.2,
                  clock: Callable[[], float] = time.perf_counter,
-                 wave_cache: Optional[Dict[Any, Callable]] = None):
+                 wave_cache: Optional[Dict[Any, Callable]] = None,
+                 health: Optional[HealthPolicy] = None,
+                 wave_wrap: Optional[Callable[[str, Callable],
+                                              Callable]] = None,
+                 sleep: Callable[[float], None] = time.sleep):
         if overflow not in caps_serve.OVERFLOW_POLICIES:
             raise ValueError(f"unknown overflow policy {overflow!r}; "
                              f"expected one of {caps_serve.OVERFLOW_POLICIES}")
@@ -201,6 +260,16 @@ class CapsFleet:
         self.strict_tenants = strict_tenants
         self.control_interval_s = control_interval_s
         self.clock = clock
+        # health: DEAD/DEGRADED classification + bury/restart policy;
+        # wave_wrap(name, fn) -> fn' decorates each replica's wave
+        # executable at creation — the fault-injection seam (faults.
+        # fleet_wrap); production fleets leave it None and never touch the
+        # chaos module.  sleep: retry-backoff sleeper for every replica
+        # server, injectable for deterministic tests.
+        self.health = health if health is not None else HealthPolicy()
+        self._wave_wrap = wave_wrap
+        self._sleep = sleep
+        self._health_events: List[dict] = []
         self.completions: List[tuple] = []   # (replica_name, Completion)
 
         default_cfg = cfg if cfg is not None else caps_serve.ServeConfig(
@@ -221,6 +290,7 @@ class CapsFleet:
             wave_cache if wave_cache is not None else {})
         self._rep_ids = itertools.count()
         self._started = False
+        self._stopping = False
         self._stop = threading.Event()
         self._controller_thread: Optional[threading.Thread] = None
         self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
@@ -263,15 +333,21 @@ class CapsFleet:
 
     def _add_replica(self, model: str) -> _Replica:
         """Create (and, if the fleet is started, launch) one replica of a
-        model group, reusing the group's cached wave executable."""
+        model group, reusing the group's cached wave executable (decorated
+        per replica by ``wave_wrap`` when set — the chaos seam)."""
         g = self._groups[model]
+        name = f"{model}/r{next(self._rep_ids)}"
+        wave_fn = g["wave_fn"]
+        if self._wave_wrap is not None:
+            wave_fn = self._wave_wrap(name, wave_fn)
         rep = _Replica(
-            name=f"{model}/r{next(self._rep_ids)}",
+            name=name,
             model=model,
             server=caps_serve.CapsServer(
                 self.params, self.caps_cfg, spec=g["spec"], cfg=g["cfg"],
-                clock=self.clock, wave_fn=g["wave_fn"],
-                watchdog=StepWatchdog(window=32)),
+                clock=self.clock, wave_fn=wave_fn,
+                watchdog=StepWatchdog(window=32, clock=self.clock),
+                sleep=self._sleep),
             watchdog=None,  # alias filled below — one watchdog, two views
             stop=threading.Event(),
         )
@@ -302,6 +378,89 @@ class CapsFleet:
             if model is not None:
                 return len(self._active(model))
             return sum(len(self._active(m)) for m in self._groups)
+
+    # -- replica health (DESIGN.md §Faults) ----------------------------------
+
+    def _health_of(self, rep: _Replica) -> str:
+        """Classify one replica.  DEAD: its server declared itself dead
+        (``ReplicaCrash``), its driver thread died, or it has failed
+        ``dead_failures`` consecutive waves.  DEGRADED: failing but still
+        retrying, or watchdog p90 > factor × median (straggling)."""
+        srv = rep.server
+        hp = self.health
+        thread_died = (self._started and rep.thread is not None
+                       and not rep.thread.is_alive() and not rep.draining)
+        if (srv.dead or thread_died
+                or srv.consecutive_failures >= hp.dead_failures):
+            return DEAD
+        p90, med = rep.watchdog.percentile(0.9), rep.watchdog.median()
+        slow = (p90 is not None and med is not None and med > 0
+                and p90 > hp.slow_p90_factor * med)
+        if srv.consecutive_failures >= hp.degraded_failures or slow:
+            return DEGRADED
+        return HEALTHY
+
+    def health_check(self) -> Dict[str, str]:
+        """Classify every non-draining replica; bury the DEAD ones
+        (evacuate + re-dispatch + restart per ``HealthPolicy``).  Run by
+        the controller thread every tick and by the synchronous drivers;
+        callable directly for deterministic tests.  Returns
+        {replica_name: state} as observed before any burial."""
+        with self._lock:
+            dead = []
+            states = {}
+            for model, g in self._groups.items():
+                for rep in g["replicas"]:
+                    if rep.draining:
+                        continue
+                    st = self._health_of(rep)
+                    states[rep.name] = st
+                    if st == DEAD:
+                        dead.append((model, rep))
+        for model, rep in dead:
+            self._bury(model, rep)
+        return states
+
+    def _bury(self, model: str, rep: _Replica) -> None:
+        """Retire a DEAD replica: stop its driver, restart a replacement
+        through the elastic controller (``HealthPolicy.restart``),
+        re-dispatch its backlog to the least-loaded survivor — or fail it
+        with accounting when no survivor exists — and retire its metrics
+        into the fleet aggregate.  Nothing is lost and the per-tenant
+        invariant holds through the hand-off."""
+        g = self._groups[model]
+        rep.server.dead = True          # stop further waves (sync mode too)
+        rep.stop.set()
+        if rep.thread is not None:
+            rep.thread.join()
+            rep.thread = None
+        with self._lock:
+            if rep not in g["replicas"]:
+                return                  # lost the race with another burial
+            g["replicas"].remove(rep)
+            self._retired.append(rep.server.metrics)
+            # no replacements while the fleet is shutting down — the
+            # backlog still re-dispatches to (stopped) survivors, which
+            # stop() drains inline
+            replacement = (self._add_replica(model)
+                           if self.health.restart and not self._stopping
+                           else None)
+            survivors = self._active(model)
+        backlog = rep.server.evacuate() if survivors else []
+        failed = 0 if survivors else rep.server.abandon()
+        adopted_by = None
+        if backlog:
+            target = min(survivors, key=lambda r: r.server.pending())
+            target.server.adopt(backlog)
+            adopted_by = target.name
+        event = {"replica": rep.name, "model": model,
+                 "evacuated": len(backlog), "failed": failed,
+                 "adopted_by": adopted_by,
+                 "restarted": replacement.name if replacement else None,
+                 "last_error": rep.server.metrics.last_error}
+        g["controller"].note("restart" if replacement else "dead", **event)
+        with self._lock:
+            self._health_events.append(dict(state=DEAD, **event))
 
     # -- admission -----------------------------------------------------------
 
@@ -396,25 +555,40 @@ class CapsFleet:
 
     def step(self) -> List[tuple]:
         """One wave on every active replica (synchronous mode); returns
-        [(replica_name, Completion), ...] and appends to ``completions``."""
+        [(replica_name, Completion), ...] and appends to ``completions``.
+        A ``ReplicaCrash`` is absorbed — the crashed replica's accounting
+        is already restored by its ``step()``, and an immediate
+        ``health_check()`` buries it and re-dispatches its backlog."""
         with self._lock:
             reps = [r for g in self._groups.values() for r in g["replicas"]]
         out = []
+        crashed = False
         for rep in reps:
-            for c in rep.server.step():
-                out.append((rep.name, c))
+            try:
+                for c in rep.server.step():
+                    out.append((rep.name, c))
+            except caps_serve.ReplicaCrash:
+                crashed = True
         with self._done_lock:
             self.completions.extend(out)
+        if crashed:
+            self.health_check()
         return out
 
     def drain(self) -> List[tuple]:
-        """Step until every replica is quiescent (synchronous mode)."""
+        """Step until every replica is quiescent (synchronous mode).
+        Fault-aware like ``CapsServer.drain``: an empty step no longer
+        means done (a failed wave returns nothing but requeues), so the
+        termination test is fleet-wide ``pending() == 0`` — bounded
+        retries plus burial of dead replicas guarantee progress."""
         out: List[tuple] = []
         while True:
             got = self.step()
-            if not got:
-                return out
             out.extend(got)
+            if not got:
+                self.health_check()     # a quiet tick may hide a dead rep
+                if self.pending() == 0:
+                    return out
 
     # -- elastic control -----------------------------------------------------
 
@@ -422,7 +596,10 @@ class CapsFleet:
         """One controller observation+decision per model group; applies
         the decision (start or drain a replica).  Called by the controller
         thread every ``control_interval_s``; callable directly for
-        deterministic tests.  Returns {model: decision}."""
+        deterministic tests.  Returns {model: decision}.  Health runs
+        first: a DEAD replica is buried (backlog re-dispatched, capacity
+        restarted) before the capacity controller observes the fleet."""
+        self.health_check()
         decisions = {}
         for model in list(self._groups):
             g = self._groups[model]
@@ -501,12 +678,19 @@ class CapsFleet:
 
     def stop(self) -> Dict[str, Any]:
         """Stop the controller, drain and join every replica, and return
-        the final ``summary()``.  Every admitted request completes or was
-        shed — never silently dropped."""
+        the final ``summary()``.  Every admitted request completes, was
+        shed, or failed with accounting — never silently dropped: a
+        replica that died after the controller's last tick is buried here
+        (its backlog re-dispatched and drained inline on the stopped
+        survivors), so shutdown self-heals exactly like steady state."""
         self._stop.set()
         if self._controller_thread is not None:
             self._controller_thread.join()
             self._controller_thread = None
+        # bury already-dead replicas while the survivors' drivers still
+        # run — the adopted backlog drains on their threads
+        self.health_check()
+        self._stopping = True       # _bury: no replacements from here on
         with self._lock:
             reps = [r for g in self._groups.values() for r in g["replicas"]]
         for rep in reps:
@@ -516,13 +700,36 @@ class CapsFleet:
                 rep.thread.join()
                 rep.thread = None
             elif rep.server.pending():
-                for c in rep.server.drain():   # synchronous-mode stop
-                    with self._done_lock:
-                        self.completions.append((rep.name, c))
+                try:                               # synchronous-mode stop
+                    for c in rep.server.drain():
+                        with self._done_lock:
+                            self.completions.append((rep.name, c))
+                except caps_serve.ReplicaCrash:
+                    pass                           # buried below
+        # late deaths (a crash during the final drain): bounded self-heal
+        # rounds — each round buries the dead, re-dispatches, and drains
+        # the stopped survivors inline; burials are finite, so this
+        # converges to pending() == 0 (or everything failed-with-books)
+        for _ in range(len(reps) + 2):
+            self.health_check()
+            if self.pending() == 0:
+                break
+            with self._lock:
+                live = [r for g in self._groups.values()
+                        for r in g["replicas"]]
+            for rep in live:
+                if rep.thread is None and rep.server.pending():
+                    try:
+                        for c in rep.server.drain():
+                            with self._done_lock:
+                                self.completions.append((rep.name, c))
+                    except caps_serve.ReplicaCrash:
+                        pass
         with self._lock:
             for model in self._groups:
                 self._reap(model)
             self._started = False
+            self._stopping = False
         return self.summary()
 
     # -- metrics -------------------------------------------------------------
@@ -535,8 +742,13 @@ class CapsFleet:
     def tenant_summary(self) -> Dict[str, Dict[str, Any]]:
         """Per-tenant fleet accounting, merging admission counters with
         every replica's (live and retired) per-tenant metrics.  Per
-        tenant: ``submitted == completed + shed + pending``, where shed =
-        admission throttling + replica back-pressure eviction."""
+        tenant: ``submitted == completed + shed + failed + pending``,
+        where shed = admission throttling + replica back-pressure
+        eviction and failed = retry exhaustion + abandoned dead-replica
+        backlog.  Evacuation/adoption cancel out here: a re-dispatched
+        request leaves the dead replica's books (``evacuated``) exactly
+        as it enters the survivor's (``submitted``), so ``pending`` is
+        simply forwarded minus everything terminal."""
         with self._lock:
             metrics = self._replica_metrics()
             admission = {t: dataclasses.replace(a)
@@ -551,6 +763,7 @@ class CapsFleet:
         for name in sorted(names):
             adm = admission.get(name, TenantAdmission())
             completed = shed_rep = goodput = rejected_rep = 0
+            failed = evacuated = 0
             for tm in tenant_maps:
                 t = tm.get(name)
                 if t is None:
@@ -559,6 +772,8 @@ class CapsFleet:
                 shed_rep += t.shed
                 goodput += t.deadline_met
                 rejected_rep += t.rejected
+                failed += t.failed
+                evacuated += t.evacuated
             out[name] = {
                 "submitted": adm.offered,
                 "forwarded": adm.forwarded,
@@ -567,7 +782,9 @@ class CapsFleet:
                 "shed_admission": adm.throttled,
                 "rejected": adm.rejected + rejected_rep,
                 "goodput": goodput,
-                "pending": adm.forwarded - completed - shed_rep,
+                "failed": failed,
+                "evacuated": evacuated,
+                "pending": adm.forwarded - completed - shed_rep - failed,
             }
         return out
 
@@ -578,16 +795,18 @@ class CapsFleet:
         per_tenant = self.tenant_summary()
         with self._lock:
             metrics = self._replica_metrics()
-            live = {rep.name: rep.server.metrics.summary()
+            live = {rep.name: dict(rep.server.metrics.summary(),
+                                   health=self._health_of(rep))
                     for g in self._groups.values()
                     for rep in g["replicas"]}
             scale_events = {m: list(g["controller"].events)
                             for m, g in self._groups.items()}
+            health_events = list(self._health_events)
             n_active = sum(len(self._active(m)) for m in self._groups)
         lat = sorted(x for m in metrics for x in m.latencies_s)
         totals = {k: sum(t[k] for t in per_tenant.values())
                   for k in ("submitted", "completed", "shed", "rejected",
-                            "goodput", "pending")}
+                            "goodput", "failed", "pending")}
         return {
             **totals,
             "replicas": n_active,
@@ -595,6 +814,13 @@ class CapsFleet:
             "waves": sum(m.waves for m in metrics),
             "padded_lanes": sum(m.padded_lanes for m in metrics),
             "shed_expired": sum(m.shed_expired for m in metrics),
+            "retried": sum(m.retried for m in metrics),
+            "requeued": sum(m.requeued for m in metrics),
+            "guard_trips": sum(m.guard_trips for m in metrics),
+            "wave_errors": sum(m.wave_errors for m in metrics),
+            "evacuated": sum(m.evacuated for m in metrics),
+            "adopted": sum(m.adopted for m in metrics),
+            "health_events": health_events,
             "per_tenant": per_tenant,
             "per_replica": live,
             "scale_events": scale_events,

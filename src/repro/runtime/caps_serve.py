@@ -18,9 +18,16 @@ pressure is a bounded queue (``ServeConfig.max_queue``) with a shed
 (tail-drop, counted in ``metrics.shed``) or reject (``QueueFullError``,
 nothing admitted) policy.  The accounting invariant under any interleaving
 (``pending()`` counts queued requests AND the wave in flight, so it holds
-even while ``step()`` is mid-wave on another thread):
+even while ``step()`` is mid-wave on another thread — and through every
+fault: a failed wave requeues or fails its requests with accounting,
+DESIGN.md §Faults):
 
-    metrics.submitted == metrics.completed + metrics.shed + pending()
+    metrics.submitted == metrics.completed + metrics.shed
+                         + metrics.failed + metrics.evacuated + pending()
+
+(``failed`` counts requests dropped after ``ServeConfig.max_wave_retries``
+exhausted retries; ``evacuated`` counts requests handed off a dead replica
+by the fleet rescue path — both zero on a fault-free standalone server.)
 
 Both registered routing algorithms serve: ``RouterSpec(algorithm="dynamic")``
 waves score classes as ‖v‖; ``algorithm="em"`` waves hand the pipeline the
@@ -64,6 +71,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import heapq
+import itertools
 import math
 import threading
 import time
@@ -82,6 +90,17 @@ class QueueFullError(RuntimeError):
     the bounded queue.  Admission is atomic — the queue and the admission
     counters are exactly as before the call (``metrics.rejected`` records
     the refusal)."""
+
+
+class ReplicaCrash(RuntimeError):
+    """The wave executable declared this replica dead — a lost device, a
+    wedged kernel, or the chaos crash fault (DESIGN.md §Faults).  Unlike a
+    transient wave exception this is not retried: ``step()`` restores the
+    accounting (the wave's requests go back to the queue at their original
+    order keys), marks the server ``dead`` and re-raises;
+    ``serve_forever`` records it in the metrics and exits cleanly so a
+    fleet health check can ``evacuate()`` the backlog and re-dispatch it
+    to surviving replicas (``runtime.caps_fleet``)."""
 
 
 def validate_arrival(images: Sequence[np.ndarray],
@@ -147,6 +166,26 @@ class ServeConfig:
                   (deadline, arrival), so waves form from the requests
                   closest to violating their SLO (DESIGN.md §Fleet);
                   deadline-less requests sort last, FIFO among themselves.
+    max_wave_retries: fault tolerance (DESIGN.md §Faults) — how many
+                  failed waves a request survives before it is *failed*
+                  with accounting.  A wave exception requeues its requests
+                  at their original order keys (``metrics.requeued``) and
+                  each carries a retry count; a request whose count
+                  exceeds this bound is counted in ``metrics.failed`` (and
+                  per tenant) instead of being requeued, so a persistent
+                  fault converges instead of retrying forever.
+    retry_backoff_s: base backoff slept after a failed wave, doubled per
+                  consecutive failure (0 = no backoff; the sleep callable
+                  is injectable on the server for deterministic tests).
+    output_guard: NaN/Inf quarantine of wave outputs — a non-finite wave
+                  is counted in ``metrics.guard_trips`` and re-run through
+                  the jnp reference router (``core.router.reference_spec``,
+                  the same fallback target as the VMEM non-fit path of the
+                  differentiable pallas router); a wave whose *reference*
+                  re-run is still non-finite fails like any other wave
+                  error.  The guard only reads finished outputs, so a
+                  finite (fault-free) wave is bit-identical with the guard
+                  on or off.
     """
     microbatch: int = 8
     n_micro: int = 4
@@ -157,6 +196,9 @@ class ServeConfig:
     max_queue: Optional[int] = None
     overflow: str = "shed"
     queue_order: str = "fifo"
+    max_wave_retries: int = 2
+    retry_backoff_s: float = 0.0
+    output_guard: bool = True
 
     def __post_init__(self):
         if self.microbatch < 1 or self.n_micro < 1:
@@ -172,6 +214,12 @@ class ServeConfig:
         if self.queue_order not in QUEUE_ORDERS:
             raise ValueError(f"unknown queue_order {self.queue_order!r}; "
                              f"expected one of {QUEUE_ORDERS}")
+        if self.max_wave_retries < 0:
+            raise ValueError(f"max_wave_retries must be >= 0; got "
+                             f"{self.max_wave_retries}")
+        if self.retry_backoff_s < 0:
+            raise ValueError(f"retry_backoff_s must be >= 0; got "
+                             f"{self.retry_backoff_s}")
 
     @property
     def wave_lanes(self) -> int:
@@ -186,6 +234,7 @@ class Request:
     tenant: str = "default"
     deadline: Optional[float] = None    # absolute clock time; None = no SLO
     priority: int = 0                   # higher = more important to keep
+    retries: int = 0                    # failed waves survived so far
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
@@ -217,21 +266,26 @@ class Completion:
 @dataclasses.dataclass
 class TenantMetrics:
     """Per-tenant slice of the admission/completion accounting — the same
-    invariant holds per tenant: submitted == completed + shed + pending."""
+    invariant holds per tenant (DESIGN.md §Faults):
+    submitted == completed + shed + failed + evacuated + pending."""
     submitted: int = 0
     completed: int = 0
     shed: int = 0
     rejected: int = 0
     deadline_met: int = 0   # completions inside their SLO (goodput)
+    failed: int = 0         # dropped after exhausting max_wave_retries
+    evacuated: int = 0      # handed off to another replica (fleet rescue)
 
     @property
     def pending(self) -> int:
-        return self.submitted - self.completed - self.shed
+        return (self.submitted - self.completed - self.shed - self.failed
+                - self.evacuated)
 
     def summary(self) -> Dict[str, int]:
         return {"submitted": self.submitted, "completed": self.completed,
                 "shed": self.shed, "rejected": self.rejected,
-                "deadline_met": self.deadline_met, "pending": self.pending}
+                "deadline_met": self.deadline_met, "failed": self.failed,
+                "evacuated": self.evacuated, "pending": self.pending}
 
 
 @dataclasses.dataclass
@@ -244,6 +298,16 @@ class ServeMetrics:
     padded_lanes: int = 0
     deadline_met: int = 0  # completions inside their SLO (goodput)
     shed_expired: int = 0  # shed victims already past deadline at eviction
+    # -- fault accounting (DESIGN.md §Faults) --------------------------------
+    failed: int = 0        # requests dropped after exhausting wave retries
+    retried: int = 0       # failed wave attempts whose requests got requeued
+    requeued: int = 0      # requests pushed back (original order keys)
+    guard_trips: int = 0   # non-finite waves quarantined to the jnp reference
+    evacuated: int = 0     # queued requests pulled off this (dead) replica
+    adopted: int = 0       # requests adopted from a dead replica (in submitted)
+    wave_errors: int = 0   # wave attempts that raised (incl. the crash)
+    callback_errors: int = 0   # on_completion callbacks that raised
+    last_error: Optional[str] = None
     latencies_s: List[float] = dataclasses.field(default_factory=list)
     tenants: Dict[str, TenantMetrics] = dataclasses.field(
         default_factory=dict)
@@ -280,6 +344,15 @@ class ServeMetrics:
             "padded_lanes": self.padded_lanes,
             "goodput": self.deadline_met,
             "shed_expired": self.shed_expired,
+            "failed": self.failed,
+            "retried": self.retried,
+            "requeued": self.requeued,
+            "guard_trips": self.guard_trips,
+            "evacuated": self.evacuated,
+            "adopted": self.adopted,
+            "wave_errors": self.wave_errors,
+            "callback_errors": self.callback_errors,
+            "last_error": self.last_error,
             "per_tenant": {name: t.summary()
                            for name, t in sorted(self.tenants.items())},
             "p50_latency_s": pct(0.5),
@@ -378,7 +451,8 @@ class CapsServer:
                  cfg: Optional[ServeConfig] = None,
                  clock: Callable[[], float] = time.perf_counter,
                  wave_fn: Optional[Callable] = None,
-                 watchdog=None):
+                 watchdog=None,
+                 sleep: Callable[[float], None] = time.sleep):
         self.caps_cfg = caps_cfg
         # cfg=None -> a fresh instance per server (a shared default-arg
         # instance would alias every server built without an explicit cfg)
@@ -392,18 +466,39 @@ class CapsServer:
                        if self.cfg.queue_order == "fifo" else [])
         self._inflight = 0          # popped for a wave, not yet completed
         self._next_rid = 0
+        # heap tiebreaker: adopt() admits requests minted by *another*
+        # replica, so (order_key) alone — which ends in that replica's rid
+        # — can collide; the monotone sequence keeps heap entries totally
+        # ordered without ever comparing Request objects
+        self._seq = itertools.count()
         # one lock guards queue + metrics + rid counter; the condition lets
         # serve_forever sleep until an admission arrives
         self._cv = threading.Condition()
         # wave_fn injection: replica fleets compile once per (spec, plan)
         # FLEET-wide and hand every replica the same executable
         # (runtime.caps_fleet); watchdog: a straggler.StepWatchdog timing
-        # every wave (the fleet's p90/straggler signal).
+        # every wave (the fleet's p90/straggler signal); sleep: the retry
+        # backoff's sleeper, injectable for deterministic fault tests.
         self._wave_fn = (wave_fn if wave_fn is not None
                          else make_wave_fn(params, caps_cfg, spec, self.cfg))
         self.watchdog = watchdog
+        self._sleep = sleep
+        # kept for the lazy jnp-reference fallback of the output guard
+        # (built only on the first guard trip — the fault-free path never
+        # pays the second compile)
+        self._params = params
+        self._spec = spec
+        self._ref_wave_fn: Optional[Callable] = None
+        self.dead = False           # set by a ReplicaCrash; no more waves
+        self._consecutive_failures = 0
         self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
                              caps_cfg.image_channels)
+
+    @property
+    def consecutive_failures(self) -> int:
+        """Consecutive failed wave attempts (reset on success) — the fleet
+        health check's DEGRADED/DEAD signal (DESIGN.md §Faults)."""
+        return self._consecutive_failures
 
     # -- admission -----------------------------------------------------------
 
@@ -411,12 +506,13 @@ class CapsServer:
         if self.cfg.queue_order == "fifo":
             self._queue.append(req)
         else:
-            heapq.heappush(self._queue, (req.order_key(), req))
+            heapq.heappush(self._queue,
+                           (req.order_key(), next(self._seq), req))
 
     def _pop_next(self) -> Request:
         if self.cfg.queue_order == "fifo":
             return self._queue.popleft()
-        return heapq.heappop(self._queue)[1]
+        return heapq.heappop(self._queue)[-1]
 
     def _evict_excess(self, now: float) -> None:
         """Deadline-queue shed: drop queue entries beyond ``max_queue``,
@@ -426,10 +522,10 @@ class CapsServer:
         excess = len(self._queue) - self.cfg.max_queue
         if excess <= 0:
             return
-        reqs = [r for _, r in self._queue]
+        reqs = [e[-1] for e in self._queue]
         reqs.sort(key=lambda r: r.shed_key(now))
         victims, keep = reqs[:excess], reqs[excess:]
-        self._queue[:] = [(r.order_key(), r) for r in keep]
+        self._queue[:] = [(r.order_key(), next(self._seq), r) for r in keep]
         heapq.heapify(self._queue)
         for r in victims:
             self.metrics.shed += 1
@@ -502,12 +598,125 @@ class CapsServer:
 
     def pending(self) -> int:
         """Requests admitted but not yet completed: queued + the wave in
-        flight — so ``submitted == completed + shed + pending()`` holds at
-        every instant, not just at quiescence."""
+        flight — so ``submitted == completed + shed + failed + evacuated +
+        pending()`` holds at every instant, not just at quiescence (the
+        last three terms are zero on a fault-free, non-fleet server)."""
         with self._cv:
             return len(self._queue) + self._inflight
 
+    # -- fleet hand-off (DESIGN.md §Faults) ----------------------------------
+
+    def evacuate(self) -> List[Request]:
+        """Pull every queued request off this replica for re-dispatch —
+        the fleet health check's rescue path for a dead replica.  The
+        requests keep their identity (rid, deadline, priority, retry
+        count); this replica's books close through ``metrics.evacuated``:
+        submitted == completed + shed + failed + evacuated + pending."""
+        with self._cv:
+            reqs = []
+            while self._queue:
+                reqs.append(self._pop_next())
+            for r in reqs:
+                self.metrics.evacuated += 1
+                self.metrics.tenant(r.tenant).evacuated += 1
+            return reqs
+
+    def abandon(self) -> int:
+        """Fail everything still queued, with accounting — the last-resort
+        close-out when a dead replica's backlog has no survivor to adopt
+        it (``runtime.caps_fleet``): the requests are counted in
+        ``metrics.failed`` (per tenant too), never silently lost."""
+        with self._cv:
+            n = 0
+            while self._queue:
+                r = self._pop_next()
+                self.metrics.failed += 1
+                self.metrics.tenant(r.tenant).failed += 1
+                n += 1
+            return n
+
+    def adopt(self, reqs: Sequence[Request]) -> int:
+        """Admit evacuated ``Request`` objects directly (the receiving end
+        of a fleet re-dispatch): original deadlines/priorities/order keys
+        are preserved, and the requests enter this replica's ``submitted``
+        books (also counted in ``metrics.adopted``) so its invariant keeps
+        holding."""
+        if not reqs:
+            return 0
+        with self._cv:
+            if self.dead:
+                raise ReplicaCrash("cannot adopt onto a dead replica")
+            for r in reqs:
+                self._push(r)
+                self.metrics.submitted += 1
+                self.metrics.adopted += 1
+                self.metrics.tenant(r.tenant).submitted += 1
+            if self.metrics.t_first_submit is None:
+                self.metrics.t_first_submit = self.clock()
+            self._cv.notify_all()
+        return len(reqs)
+
     # -- one wave ------------------------------------------------------------
+
+    def _requeue_front(self, reqs: List[Request]) -> None:
+        """Put a failed wave's requests back at their original queue
+        positions: FIFO restores the front slice in order; the deadline
+        heap re-inserts by the unchanged ``order_key``.  Caller holds the
+        lock."""
+        if self.cfg.queue_order == "fifo":
+            self._queue.extendleft(reversed(reqs))
+        else:
+            for r in reqs:
+                self._push(r)
+
+    def _abort_wave(self, reqs: List[Request], crash: bool,
+                    error: BaseException) -> float:
+        """Restore accounting after a failed wave attempt: ``_inflight``
+        drops, survivors requeue at their original order keys, requests
+        beyond ``max_wave_retries`` fail with accounting, and a crash
+        marks the server dead.  Returns the backoff to sleep (0 on
+        crash)."""
+        with self._cv:
+            m = self.metrics
+            self._inflight -= len(reqs)
+            m.wave_errors += 1
+            m.last_error = f"{type(error).__name__}: {error}"
+            self._consecutive_failures += 1
+            requeue = []
+            for r in reqs:
+                if crash:
+                    requeue.append(r)       # not the request's fault
+                    continue
+                r.retries += 1
+                if r.retries > self.cfg.max_wave_retries:
+                    m.failed += 1
+                    m.tenant(r.tenant).failed += 1
+                else:
+                    requeue.append(r)
+            self._requeue_front(requeue)
+            m.requeued += len(requeue)
+            if crash:
+                self.dead = True
+            elif requeue:
+                m.retried += 1
+            backoff = (0.0 if crash else
+                       self.cfg.retry_backoff_s
+                       * (2 ** (self._consecutive_failures - 1)))
+            self._cv.notify_all()
+        return backoff
+
+    def _reference_wave_fn(self) -> Callable:
+        """Lazy jnp reference executable for the output guard — the same
+        fallback target the differentiable pallas router resolves to when
+        the procedure form does not fit VMEM (``core.router.
+        reference_spec``, DESIGN.md §Training/§Faults).  Built on the
+        first guard trip only; a healthy server never compiles it."""
+        if self._ref_wave_fn is None:
+            ref = (router_lib.reference_spec(self._spec)
+                   if self._spec is not None else None)
+            self._ref_wave_fn = make_wave_fn(self._params, self.caps_cfg,
+                                             ref, self.cfg)
+        return self._ref_wave_fn
 
     def step(self) -> List[Completion]:
         """Run one wave over whatever is queued (up to ``wave_lanes``).
@@ -516,18 +725,25 @@ class CapsServer:
         requests to the constant wave shape (masked lanes, so padding never
         perturbs real outputs) and completes them.  The wave compute runs
         outside the lock; only queue pops and metric updates hold it.
-        """
+
+        Fault boundary (DESIGN.md §Faults): a raising wave restores the
+        accounting — the watchdog stops, ``_inflight`` drops, and the
+        requests are requeued at their original order keys (or failed with
+        accounting once past ``max_wave_retries``) — then ``step`` returns
+        [] after the configured backoff; the invariant holds through every
+        failure.  A non-finite wave output is quarantined and re-run
+        through the jnp reference router (``metrics.guard_trips``).  A
+        ``ReplicaCrash`` additionally marks the server ``dead`` and
+        re-raises for the caller (fleet health check / serve_forever)."""
         cfg = self.cfg
         with self._cv:
-            if not self._queue:
+            if self.dead or not self._queue:
                 return []
             take = min(len(self._queue), cfg.wave_lanes)
             reqs = [self._pop_next() for _ in range(take)]
             self._inflight += take
             wave_index = self.metrics.waves
 
-        if self.watchdog is not None:
-            self.watchdog.start(wave_index)
         images = np.zeros((cfg.wave_lanes,) + self._image_shape, np.float32)
         mask = np.zeros((cfg.wave_lanes,), np.float32)
         for i, r in enumerate(reqs):
@@ -538,11 +754,33 @@ class CapsServer:
                 (cfg.n_micro, cfg.microbatch) + self._image_shape),
             "mask": jnp.asarray(mask).reshape(cfg.n_micro, cfg.microbatch),
         }
-        scores = self._wave_fn(micro)                # (n_micro, mb, N_H)
-        preds = np.asarray(jnp.argmax(scores, axis=-1)).reshape(-1)
-        if self.watchdog is not None:
-            self.watchdog.stop()
+        try:
+            if self.watchdog is not None:
+                self.watchdog.start(wave_index)
+            scores = np.asarray(self._wave_fn(micro))    # (n_micro, mb, N_H)
+            if cfg.output_guard and not np.isfinite(scores).all():
+                # quarantine: the wave executable produced NaN/Inf — rerun
+                # the SAME padded wave through the jnp reference router
+                with self._cv:
+                    self.metrics.guard_trips += 1
+                scores = np.asarray(self._reference_wave_fn()(micro))
+                if not np.isfinite(scores).all():
+                    raise FloatingPointError(
+                        "non-finite wave output survived the jnp "
+                        "reference re-run (bad input, not a kernel fault)")
+        except ReplicaCrash as e:
+            self._abort_wave(reqs, crash=True, error=e)
+            raise
+        except Exception as e:        # noqa: BLE001 — any wave fault
+            backoff = self._abort_wave(reqs, crash=False, error=e)
+            if backoff > 0:
+                self._sleep(backoff)
+            return []
+        finally:
+            if self.watchdog is not None:
+                self.watchdog.stop()  # no-op when start() never ran
 
+        preds = scores.reshape(-1, scores.shape[-1]).argmax(axis=-1)
         t_done = self.clock()
         out = []
         with self._cv:
@@ -558,6 +796,7 @@ class CapsServer:
                     self.metrics.deadline_met += 1
                     t.deadline_met += 1
             self._inflight -= take
+            self._consecutive_failures = 0
             self.metrics.completed += take
             self.metrics.padded_lanes += cfg.wave_lanes - take
             self.metrics.waves += 1
@@ -565,13 +804,20 @@ class CapsServer:
         return out
 
     def drain(self) -> List[Completion]:
-        """Step until the queue is empty; returns all completions."""
+        """Step until the queue is empty; returns all completions.
+
+        Fault-aware: a failed wave returns [] with its requests requeued,
+        so emptiness of the *queue* — not of one step's output — is the
+        termination test.  Bounded retries guarantee progress (every
+        failed attempt moves each request toward ``max_wave_retries``), so
+        this terminates even under a persistent fault; a dead server
+        stops immediately (its backlog awaits ``evacuate()``)."""
         out: List[Completion] = []
         while True:
-            got = self.step()
-            if not got:
-                return out
-            out.extend(got)
+            out.extend(self.step())
+            with self._cv:
+                if self.dead or not self._queue:
+                    return out
 
     # -- async driver --------------------------------------------------------
 
@@ -588,22 +834,45 @@ class CapsServer:
         admission condition otherwise (``poll_s`` bounds how long a stop
         request can go unnoticed).  On stop, everything still queued is
         drained, so a clean shutdown ends with ``pending() == 0`` and the
-        invariant ``submitted == completed + shed`` (no lost or
+        invariant ``submitted == completed + shed + failed`` (no lost or
         double-counted requests).
+
+        Crash-proof (DESIGN.md §Faults): ``step()`` already absorbs
+        transient wave faults (requeue/fail with accounting), and this
+        driver additionally survives (a) a raising ``on_completion``
+        callback — the completion lands in the returned list and the
+        metrics *before* the callback runs, the error is counted in
+        ``metrics.callback_errors`` — and (b) a ``ReplicaCrash``, on
+        which it returns cleanly with the completions so far (the dead
+        server's backlog awaits ``evacuate()``).
         """
         done: List[Completion] = []
 
         def emit(batch: List[Completion]):
+            # `done` and the server metrics are final before any client
+            # callback runs — a raising callback can't lose accounted
+            # requests, it is merely counted.
             done.extend(batch)
             if on_completion is not None:
                 for c in batch:
-                    on_completion(c)
+                    try:
+                        on_completion(c)
+                    except Exception as e:   # noqa: BLE001 — client code
+                        with self._cv:
+                            self.metrics.callback_errors += 1
+                            self.metrics.last_error = (
+                                f"on_completion {type(e).__name__}: {e}")
 
-        while not stop_event.is_set():
-            with self._cv:
-                if not self._queue:
-                    self._cv.wait(timeout=poll_s)
-                    continue
-            emit(self.step())
-        emit(self.drain())
+        try:
+            while not stop_event.is_set():
+                with self._cv:
+                    if self.dead:
+                        return done
+                    if not self._queue:
+                        self._cv.wait(timeout=poll_s)
+                        continue
+                emit(self.step())
+            emit(self.drain())
+        except ReplicaCrash:
+            pass    # accounting already restored by step(); exit cleanly
         return done

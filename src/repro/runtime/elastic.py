@@ -122,6 +122,16 @@ class ElasticController:
                                 "p90_s": p90_s, "median_s": median_s})
         return decision
 
+    def note(self, decision: str, **snapshot) -> None:
+        """Record an externally-applied capacity event in ``events`` —
+        e.g. the fleet health check restarting a dead replica
+        ("restart", DESIGN.md §Faults) — so the scale-event log stays the
+        single provenance stream for every capacity change, and resets the
+        hysteresis counters (the fleet just changed size out from under
+        them)."""
+        self._up_ticks = self._down_ticks = 0
+        self.events.append({"decision": decision, **snapshot})
+
 
 def resume_or_init(cfg: lm.ArchConfig, mesh: jax.sharding.Mesh,
                    ckpt_dir: str, key,

@@ -19,23 +19,35 @@ from typing import Callable, Iterator, Optional
 
 
 class StepWatchdog:
-    """Tracks step durations; flags steps slower than k× the rolling median."""
+    """Tracks step durations; flags steps slower than k× the rolling median.
+
+    ``clock`` is injectable (like ``CapsServer.clock``) so fault/straggler
+    tests are deterministic; the default is the real monotonic clock.
+    ``stop()`` without a preceding ``start()`` is a no-op returning
+    ``None`` — a crashed wave's try/finally may reach ``stop()`` before
+    the watchdog ever started (runtime.caps_serve, DESIGN.md §Faults).
+    """
 
     def __init__(self, window: int = 50, slow_factor: float = 3.0,
-                 on_slow: Optional[Callable[[int, float, float], None]] = None):
+                 on_slow: Optional[Callable[[int, float, float], None]] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.durations: collections.deque = collections.deque(maxlen=window)
         self.slow_factor = slow_factor
         self.on_slow = on_slow
+        self.clock = clock
         self.slow_steps: list[int] = []
         self._t0: Optional[float] = None
         self._step = 0
 
     def start(self, step: int) -> None:
         self._step = step
-        self._t0 = time.monotonic()
+        self._t0 = self.clock()
 
-    def stop(self) -> float:
-        dt = time.monotonic() - self._t0
+    def stop(self) -> Optional[float]:
+        if self._t0 is None:                 # stop before any start: no-op
+            return None
+        dt = self.clock() - self._t0
+        self._t0 = None
         med = self.median()
         if med is not None and dt > self.slow_factor * med:
             self.slow_steps.append(self._step)

@@ -65,8 +65,8 @@ class FakeClock:
 
 def check_tenant_invariant(summary):
     for name, t in summary["per_tenant"].items():
-        assert t["submitted"] == t["completed"] + t["shed"] + t["pending"], \
-            (name, t)
+        assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                                  + t["pending"]), (name, t)
 
 
 # ---------------------------------------------------------------------------
