@@ -23,6 +23,13 @@ gating that no request is lost (extended per-tenant invariant at drain,
 ``failed == 0``), that the crash was healed (one burial, evacuated ==
 adopted), that the NaN wave was quarantined (guard_trips >= 1), and that
 goodput stays >= 80% of the fault-free 1.0-load cell.
+The mixed arm (DESIGN.md §WaveServe) serves three *workloads* — the
+paper's CapsNet waves, LM greedy-decode waves (``LMDecodeAdapter``) and
+MoE dispatch waves (``MoEAdapter``, the 'moe' Router algorithm) — as model
+groups of ONE ``CapsFleet`` instance, one tenant per workload, gating that
+every workload's books balance (nothing lost, nothing shed) and that
+per-workload goodput holds; the serving machinery is shared, only the
+adapters differ.
 Reported per (arm, load) cell: median/p90 request latency (queue +
 compute), throughput, and shed count (plus goodput and the per-tenant
 breakdown for the fleet arm).  Correctness gates assert pipelined == unpipelined class
@@ -53,7 +60,7 @@ from repro.runtime.caps_serve import (CapsServer, ServeConfig, ServeMetrics,
 from repro.runtime.elastic import ElasticPolicy
 
 ARMS = ("pipelined", "unpipelined", "async", "em_pipelined",
-        "em_unpipelined", "fleet", "chaos")
+        "em_unpipelined", "fleet", "chaos", "mixed")
 
 
 def _setup():
@@ -263,6 +270,108 @@ def run_cell_fleet(params, caps_cfg, microbatch: int, n_micro: int,
                                if elapsed > 0 else None)}
 
 
+def run_cell_mixed(params, caps_cfg, microbatch: int, n_micro: int,
+                   total: int, load: float, wave_cache: dict,
+                   tick_s: float) -> dict:
+    """One mixed-workload cell (DESIGN.md §WaveServe): CapsNet, LM-decode
+    and MoE model groups — one tenant each — share a single ``CapsFleet``
+    instance and its admission front-end; the caps group reuses the
+    fleet-wide wave cache, the adapter groups compile their own wave
+    executables in-cell.  SLOs are generous (this cell gates *accounting
+    and goodput across workloads*, not latency): caps at a wave-time
+    multiple, the adapter workloads absolute (their first wave carries
+    the compile)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import lm
+    from repro.models import moe as moe_lib
+    from repro.runtime.serve_loop import LMDecodeAdapter, MoEAdapter
+
+    lanes = microbatch * n_micro
+    arch = get_smoke_config("granite-3-2b")
+    lm_adapter = LMDecodeAdapter(lm.init_params(arch, jax.random.PRNGKey(1)),
+                                 arch, prompt_len=8, max_new_tokens=4)
+    # capacity_factor >= E/top_k: nothing dropped, padding cannot evict
+    # real tokens (MoEAdapter docstring)
+    moe_cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, n_experts=4, top_k=2,
+                                capacity_factor=4.0)
+    moe_adapter = MoEAdapter(
+        moe_lib.init_moe(jax.random.PRNGKey(2), moe_cfg, dtype=jnp.float32),
+        moe_cfg, seq_len=8)
+
+    caps_cfg_s = ServeConfig(microbatch=microbatch, n_micro=n_micro,
+                             pipeline="software", queue_order="deadline")
+    flat_cfg = ServeConfig(microbatch=microbatch, n_micro=n_micro,
+                           pipeline=None, queue_order="deadline")
+    tenants = [TenantPolicy("caps", slo_s=30 * tick_s, priority=1),
+               TenantPolicy("lm", slo_s=30.0, priority=0),
+               TenantPolicy("moe", slo_s=30.0, priority=0)]
+    fleet = CapsFleet(params, caps_cfg, tenants=tenants,
+                      models={"caps": (None, caps_cfg_s),
+                              "lm": (lm_adapter, flat_cfg),
+                              "moe": (moe_adapter, flat_cfg)},
+                      policy=ElasticPolicy(min_replicas=1, max_replicas=1),
+                      wave_cache=wave_cache)
+    ds = SyntheticCapsDataset(caps_cfg.image_hw, caps_cfg.image_channels,
+                              caps_cfg.num_h_caps)
+    rng = np.random.default_rng(0)
+    left = {"caps": total, "lm": total // 2, "moe": total // 2}
+
+    def make_items(name, tick, count):
+        if name == "caps":
+            return ds.batch(tick, count)["images"]
+        if name == "lm":
+            return rng.integers(0, arch.vocab, (count, 8), dtype=np.int32)
+        return rng.standard_normal((count, 8, moe_cfg.d_model)).astype(
+            np.float32)
+
+    tick = 0
+    t0 = time.perf_counter()
+    while any(left.values()) or fleet.pending():
+        for name in ("caps", "lm", "moe"):
+            count = min(left[name],
+                        int(rng.poisson(max(1.0, load * lanes))))
+            if count:
+                fleet.submit(make_items(name, tick, count), tenant=name,
+                             model=name)
+                left[name] -= count
+        fleet.step()
+        tick += 1
+    elapsed = time.perf_counter() - t0
+    s = fleet.summary()
+    assert s["pending"] == 0, s
+    assert s["submitted"] == s["completed"] + s["shed"] + s["failed"], s
+    for name, t in s["per_tenant"].items():
+        assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
+                                  + t["pending"]), (name, t)
+    return {"offered_load": load, "requests": s["completed"],
+            "waves": s["waves"], "padded_lanes": s["padded_lanes"],
+            "shed": s["shed"], "failed": s["failed"],
+            "goodput": s["goodput"],
+            "per_workload": s["per_tenant"],
+            "latency": {"median_s": s["p50_latency_s"],
+                        "p90_s": s["p90_latency_s"]},
+            "throughput_rps": (s["completed"] / elapsed
+                               if elapsed > 0 else None)}
+
+
+def mixed_gates(row: dict) -> None:
+    """Per-workload gates for the mixed arm: queues are unbounded and the
+    SLOs generous, so every workload's arrival must complete (zero shed,
+    zero failed — nothing lost crossing adapter boundaries) and
+    per-workload goodput must hold (>= 80% of completions inside SLO —
+    slack only for scheduler noise on loaded CI hosts)."""
+    assert row["failed"] == 0 and row["shed"] == 0, \
+        f"mixed arm lost or shed requests: {row}"
+    for name, t in row["per_workload"].items():
+        assert t["completed"] == t["submitted"], \
+            f"workload {name} did not drain: {t}"
+        assert t["completed"] > 0, f"workload {name} served nothing: {t}"
+        assert t["goodput"] >= 0.8 * t["completed"], \
+            f"workload {name} goodput collapsed: {t}"
+
+
 def chaos_plans(faults):
     """The chaos arm's deterministic schedule (exceptions + NaN + one
     replica crash): pinned events, not sampled rates, so every run of the
@@ -384,6 +493,14 @@ def main():
                 wave_wrap=faults.fleet_wrap(chaos_plans(faults))))
             chaos_gates(rows[arm][0], rows["fleet"], common.smoke())
             continue
+        if arm == "mixed":
+            # CapsNet + LM + MoE model groups behind ONE fleet instance
+            # (DESIGN.md §WaveServe); a single 1.0-load cell — the sweep
+            # shape belongs to the per-workload arms above
+            emit(arm, run_cell_mixed(params, caps_cfg, microbatch, n_micro,
+                                     total, 1.0, wave_cache, tick_s))
+            mixed_gates(rows[arm][0])
+            continue
         server = make_server(params, caps_cfg, arm,
                              _serve_cfg(arm, microbatch, n_micro))
         cell = run_cell_async if arm == "async" else run_cell
@@ -405,6 +522,16 @@ def main():
                       "tenants": {"gold": {"priority": 1, "slo_waves": 8},
                                   "free": {"priority": 0,
                                            "slo_waves": 12}}},
+            "mixed": {"offered_load": 1.0,
+                      "workloads": {"caps": "CapsNet waves (shared cache)",
+                                    "lm": "granite-3-2b-smoke greedy "
+                                          "decode, prompt 8 -> +4",
+                                    "moe": "E=4 top2 dispatch via "
+                                           "RouterSpec(algorithm='moe')"},
+                      "gates": ["shed == 0", "failed == 0",
+                                "per-workload completed == submitted",
+                                "per-workload deadline_met >= "
+                                "0.8 x completed"]},
             "chaos": {"offered_load": 1.0,
                       "schedule": "pinned: r0 error@1 crash@3, "
                                   "r1 corrupt@2 error@5",

@@ -191,6 +191,12 @@ EOF
   PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --chaos \
     --replicas 2 --tenants 2 --slo-ms 5000
 
+  echo "== smoke: repro.launch.serve_caps --smoke --model lm (WaveServe LM adapter) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --model lm
+
+  echo "== smoke: repro.launch.serve_caps --smoke --model moe (WaveServe MoE adapter) =="
+  PYTHONPATH="$ROOT/src" python -m repro.launch.serve_caps --smoke --model moe
+
   echo "== smoke: benchmarks.run --smoke --only serving (JSON artifact) =="
   PYTHONPATH="$ROOT/src:$ROOT" python -m benchmarks.run --smoke --only serving
   python - <<'EOF'
@@ -253,6 +259,18 @@ for name, t in cc["per_tenant"].items():
     assert t["submitted"] == (t["completed"] + t["shed"] + t["failed"]
                               + t["pending"]), (name, t)
     assert t["pending"] == 0, (name, t)
+
+# mixed arm: CapsNet + LM decode + MoE waves through ONE CapsFleet
+# (DESIGN.md §WaveServe) — per-workload goodput gates, nothing dropped
+assert "mixed" in d["arms"], sorted(d["arms"])
+(mx,) = d["arms"]["mixed"]
+assert mx["failed"] == 0 and mx["shed"] == 0, mx
+pw = mx["per_workload"]
+assert set(pw) == {"caps", "lm", "moe"}, pw
+for name, t in pw.items():
+    assert t["completed"] == t["submitted"] > 0, (name, t)
+    assert t["pending"] == 0, (name, t)
+    assert t["goodput"] >= 0.8 * t["completed"], (name, t)
 print("BENCH_serving.json OK (strict JSON):", len(d["arms"]), "arms x",
       len(d["offered_loads"]), "offered-load points + fleet sweep",
       d["fleet"]["offered_loads"], "+ chaos arm",

@@ -302,6 +302,53 @@ EM = register_algorithm(Algorithm(
 ))
 
 
+# --- "moe" top-k expert dispatch -------------------------------------------
+#
+# MoE expert dispatch has the routing-procedure shape the paper's §2.2
+# characterizes — per-token assignment logits, a cross-token aggregation
+# (capacity-bounded gather/scatter), massive unshareable intermediates —
+# so it registers here as a Router algorithm (DESIGN.md §WaveServe) and
+# expert-parallel plans flow through the same build_router registry and
+# Table-2 psum seams ("E" on a mesh axis == experts sharded, outputs
+# psum'd) instead of a parallel code path.  jnp backend first; args are
+# ``models.moe.router_args(params)`` order.
+
+def _moe_run(args, spec: RouterSpec, axes: Mapping[str, str]):
+    # lazy: CapsNet routing never pays the models-package import
+    from repro.models import moe as moe_lib
+    x2d, router_w, w_gate, w_up, w_down = args
+    cfg = spec.option("moe_cfg")
+    if cfg is None:
+        raise ValueError(
+            "algorithm 'moe' needs the static MoEConfig in the spec "
+            "options: RouterSpec(algorithm='moe', "
+            "options=(('moe_cfg', cfg),))")
+    axis = axes.get("E")
+    offset = (jax.lax.axis_index(axis) * w_gate.shape[0]
+              if axis is not None else 0)
+    return moe_lib._moe_local(x2d, router_w, w_gate, w_up, w_down, cfg,
+                              offset, axis)
+
+
+MOE = register_algorithm(Algorithm(
+    name="moe",
+    run=_moe_run,
+    # tokens + router replicated; the three expert stacks sharded on E
+    in_specs=lambda ax: (P(None, None), P(None, None),
+                         P(ax.get("E"), None, None),
+                         P(ax.get("E"), None, None),
+                         P(ax.get("E"), None, None)),
+    # y (T, D) is psum'd over the expert axis inside _moe_local, aux with
+    # it — both leave the shard_map replicated
+    out_specs=lambda ax: (P(None, None), P()),
+    sharded_dims=("E",),
+    backends=("jnp",),
+    num_inputs=5,
+    describe="MoE top-k dispatch: x (T,D) + router/expert weights -> "
+             "(y (T,D), aux); shard 'E' for expert parallelism",
+))
+
+
 # ---------------------------------------------------------------------------
 # ExecutionPlan — distribution + pipelining
 # ---------------------------------------------------------------------------
@@ -426,6 +473,10 @@ def plan_axes(spec: RouterSpec, plan: ExecutionPlan,
     axis = candidates[0]
     n = mesh.shape[axis]
     algo = get_algorithm(spec.algorithm)
+    if not set(algo.sharded_dims) & {"B", "L", "H"}:
+        # the §5.1.2 score table ranks capsule dims only; algorithms
+        # sharded on other dims (e.g. moe's "E") take explicit axes
+        return ()
     s = plan.rp_shape or derive_rp_shape(spec.algorithm, shapes,
                                          spec.iterations)
     # an explicit DeviceModel keeps its own operating point (e.g. the

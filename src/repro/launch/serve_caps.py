@@ -1,4 +1,4 @@
-"""CapsNet serving launcher — continuous batching over the §4 pipeline.
+"""Wave-serving launcher — continuous batching over the §4 pipeline.
 
 Drives the paper's workload (Table-1 CapsNet benchmarks) through
 ``repro.runtime.caps_serve`` (DESIGN.md §Serving): synthetic requests
@@ -24,9 +24,18 @@ hardened wave path, and the exit assertions prove the extended invariant
 (``submitted == completed + shed + failed``) held: no request is ever
 silently lost, only completed, shed, or failed-with-accounting.
 
+``--model lm`` / ``--model moe`` serve the non-CapsNet workload adapters
+(DESIGN.md §WaveServe) through the *same* generic wave core
+(``repro.runtime.wave_serve``): LM greedy decode waves over
+``LMDecodeAdapter`` and fixed-shape MoE dispatch waves over ``MoEAdapter``
+(the 'moe' Router algorithm via ``build_router``) — one serving stack,
+three workloads.
+
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke --async
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke --chaos
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke --model lm
+    PYTHONPATH=src python -m repro.launch.serve_caps --smoke --model moe
     PYTHONPATH=src python -m repro.launch.serve_caps --smoke \
         --replicas 2 --tenants 2 --slo-ms 2000 --chaos
     PYTHONPATH=src python -m repro.launch.serve_caps \
@@ -187,10 +196,98 @@ def run_fleet(args, caps_cfg, params, ds, cfg: ServeConfig, spec, schedule):
           f"{len(events)} scale events")
 
 
+def run_model_workload(args):
+    """``--model lm`` / ``--model moe``: serve a non-CapsNet workload
+    adapter through the generic wave core (single server, sync tick loop)
+    and prove the same accounting invariant the CapsNet paths assert."""
+    import jax.numpy as jnp
+
+    from repro.runtime import wave_serve
+
+    cfg = ServeConfig(microbatch=args.microbatch, n_micro=args.n_micro,
+                      pipeline=None, max_queue=args.max_queue)
+    rng = np.random.default_rng(args.chaos_seed + 1)
+    if args.model == "lm":
+        from repro.configs.base import get_smoke_config
+        from repro.models import lm
+        from repro.runtime.serve_loop import LMDecodeAdapter
+        arch = get_smoke_config("granite-3-2b")
+        params = lm.init_params(arch, jax.random.PRNGKey(0))
+        prompt_len, max_new = 8, 4
+        adapter = LMDecodeAdapter(params, arch, prompt_len=prompt_len,
+                                  max_new_tokens=max_new)
+        desc = (f"{arch.name}: greedy decode waves, prompt {prompt_len} "
+                f"-> +{max_new} tokens")
+
+        def make_items(count):
+            return rng.integers(0, arch.vocab, (count, prompt_len),
+                                dtype=np.int32)
+    else:
+        from repro.models import moe as moe_lib
+        from repro.runtime.serve_loop import MoEAdapter
+        # capacity_factor >= n_experts/top_k: nothing dropped, so padded
+        # lanes can never evict real tokens (see MoEAdapter docstring)
+        moe_cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, n_experts=4,
+                                    top_k=2, capacity_factor=4.0)
+        params = moe_lib.init_moe(jax.random.PRNGKey(0), moe_cfg,
+                                  dtype=jnp.float32)
+        seq_len = 8
+        adapter = MoEAdapter(params, moe_cfg, seq_len=seq_len)
+        desc = (f"moe-tiny: E={moe_cfg.n_experts} top{moe_cfg.top_k} "
+                f"dispatch waves via RouterSpec(algorithm='moe'), "
+                f"blocks ({seq_len}, {moe_cfg.d_model})")
+
+        def make_items(count):
+            return rng.standard_normal(
+                (count, seq_len, moe_cfg.d_model)).astype(np.float32)
+
+    wave_fn = None
+    if args.chaos:
+        from repro.runtime import faults   # chaos only: lazy, opt-in
+        wave_fn = faults.chaos_wave_fn(
+            adapter.make_wave_fn(cfg),
+            chaos_plan(args, cfg, faults, crash=False))
+    server = wave_serve.WaveServer(adapter, cfg=cfg, wave_fn=wave_fn)
+    schedule = arrival_schedule(args.requests,
+                                max(1.0, args.load * cfg.wave_lanes))
+    print(f"{desc}; {args.requests} requests over {len(schedule)} ticks, "
+          f"wave = {cfg.n_micro} x {cfg.microbatch} lanes"
+          + (f", chaos seed {args.chaos_seed}" if args.chaos else ""))
+
+    done = []
+    for tick, count in enumerate(schedule):
+        if count:
+            server.submit(make_items(count))
+        done.extend(server.step())
+    done.extend(server.drain())
+
+    s = server.metrics.summary()
+    assert s["submitted"] == s["completed"] + s["shed"] + s["failed"], s
+    assert server.pending() == 0, server.pending()
+    assert s["completed"] + s["shed"] + s["failed"] == args.requests, \
+        (s, args.requests)
+    print(f"served {s['completed']} requests in {s['waves']} waves "
+          f"({s['padded_lanes']} padded lanes, {s['shed']} shed, "
+          f"{s['failed']} failed)")
+    if args.chaos:
+        print(f"chaos: {s['wave_errors']} wave errors, {s['retried']} "
+              f"retried, {s['requeued']} requeued, {s['guard_trips']} "
+              f"guard trips")
+    thr = s["throughput_rps"]
+    print(f"latency p50 {_fmt_ms(s['p50_latency_s'])}, "
+          f"p90 {_fmt_ms(s['p90_latency_s'])}; "
+          f"throughput {'n/a' if thr is None else f'{thr:.1f} req/s'}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--network", default="Caps-MN1",
                     choices=sorted(CAPS_BENCHMARKS))
+    ap.add_argument("--model", default="caps", choices=("caps", "lm", "moe"),
+                    help="workload adapter to serve (DESIGN.md §WaveServe): "
+                         "caps = the paper's CapsNet waves; lm / moe run "
+                         "the single-server tick loop over the LM-decode / "
+                         "MoE adapters (fleet/async flags are caps-only)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config + tiny request count (CI)")
     ap.add_argument("--requests", type=int, default=64)
@@ -246,6 +343,10 @@ def main():
         args.microbatch, args.n_micro = 4, 2
     else:
         caps_cfg = CAPS_BENCHMARKS[args.network]
+
+    if args.model != "caps":
+        run_model_workload(args)
+        return
 
     pipeline = None if args.pipeline == "none" else args.pipeline
     mesh = None

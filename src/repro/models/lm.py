@@ -20,6 +20,7 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.models import layers as L
@@ -668,6 +669,28 @@ def decode_step(params, cfg: ArchConfig, state: DecodeState,
     new_state = DecodeState(kv=new_kv, ssm=new_ssm, cross=state.cross,
                             pos=pos + 1)
     return logits, new_state
+
+
+def validate_prompts(tokens, cfg: ArchConfig, prompt_len: int):
+    """The validate half of validate-then-mutate serving admission
+    (DESIGN.md §WaveServe): assemble an arrival of token prompts into one
+    ``(n, prompt_len)`` int32 array or raise ``ValueError`` with no side
+    effects.  Used by ``runtime.serve_loop.LMDecodeAdapter``."""
+    try:
+        arr = np.asarray(tokens, np.int32)
+    except (ValueError, TypeError) as e:
+        raise ValueError(
+            "ragged arrival: could not assemble the prompts into one "
+            f"(n, {prompt_len}) int array — every prompt must be "
+            f"{prompt_len} token ids") from e
+    if arr.ndim != 2 or arr.shape[1] != prompt_len:
+        got = arr.shape[1:] if arr.ndim == 2 else arr.shape
+        raise ValueError(f"prompt shape {got} != ({prompt_len},)")
+    if arr.size and (arr.min() < 0 or arr.max() >= cfg.vocab):
+        raise ValueError(
+            f"prompt token ids must be in [0, {cfg.vocab}); got range "
+            f"[{arr.min()}, {arr.max()}]")
+    return arr
 
 
 def prefill(params, cfg: ArchConfig, batch: Dict[str, jax.Array],

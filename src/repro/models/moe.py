@@ -177,6 +177,15 @@ def moe_forward(params: Mapping[str, jax.Array], x: jax.Array,
     return y.reshape(B, S, D), aux
 
 
+def router_args(params: Mapping[str, jax.Array]) -> tuple:
+    """Positional argument order of the 'moe' Router algorithm
+    (``core.router``): ``router(x2d, *router_args(params))`` with
+    ``RouterSpec(algorithm="moe", options=(("moe_cfg", cfg),))`` computes
+    the same (y, aux) as ``moe_forward`` on the flattened tokens."""
+    return (params["router"], params["w_gate"], params["w_up"],
+            params["w_down"])
+
+
 def moe_forward_dense_oracle(params, x: jax.Array, cfg: MoEConfig):
     """O(T·E) oracle: run every expert on every token, weight by router —
     no capacity drops.  Tests compare the dispatch path against this with

@@ -77,7 +77,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
-from repro.runtime import caps_serve
+from repro.runtime import caps_serve, wave_serve
 from repro.runtime.elastic import ElasticController, ElasticPolicy
 from repro.runtime.straggler import StepWatchdog
 
@@ -204,7 +204,7 @@ class TenantAdmission:
 class _Replica:
     name: str
     model: str
-    server: caps_serve.CapsServer
+    server: wave_serve.WaveServer
     watchdog: StepWatchdog
     stop: threading.Event
     thread: Optional[threading.Thread] = None
@@ -223,10 +223,15 @@ class CapsFleet:
     """Quota/rate-limited, SLO-aware, elastically-sized front-end over N
     replica ``CapsServer``s (DESIGN.md §Fleet).
 
-    ``models`` maps a model-group name to the ``(RouterSpec, ServeConfig)``
-    its replicas run — mixed (spec, plan) groups serve side by side, all
-    sharing the fleet-wide compile-once wave cache.  Each group scales
-    independently between ``policy.min_replicas`` and ``max_replicas``.
+    ``models`` maps a model-group name to what its replicas run: the
+    pre-WaveServe CapsNet form ``(RouterSpec, ServeConfig)`` (spec None =
+    default dynamic routing), or — since the WaveServe refactor
+    (DESIGN.md §WaveServe) — any ``wave_serve.WorkloadAdapter`` (bare, or
+    ``(adapter, ServeConfig)``), so CapsNet, LM-decode and MoE groups
+    serve side by side behind one admission front-end, all sharing the
+    fleet-wide compile-once wave cache (keyed per adapter
+    ``cache_key()``).  Each group scales independently between
+    ``policy.min_replicas`` and ``max_replicas``.
 
     Two driving modes: ``start()``/``stop()`` runs every replica's
     ``serve_forever`` plus the elastic controller on threads (completions
@@ -293,38 +298,62 @@ class CapsFleet:
         self._stopping = False
         self._stop = threading.Event()
         self._controller_thread: Optional[threading.Thread] = None
-        self._image_shape = (caps_cfg.image_hw, caps_cfg.image_hw,
-                             caps_cfg.image_channels)
-
         self._groups: Dict[str, dict] = {}
         for name, entry in models.items():
-            spec, gcfg = (entry if isinstance(entry, tuple)
-                          else (entry, None))
-            gcfg = gcfg if gcfg is not None else default_cfg
+            adapter, spec, gcfg = self._as_adapter(entry, default_cfg)
             self._groups[name] = {
-                "spec": spec, "cfg": gcfg,
-                "wave_fn": self._cached_wave_fn(spec, gcfg),
+                "adapter": adapter, "spec": spec, "cfg": gcfg,
+                "wave_fn": self._cached_wave_fn(adapter, gcfg),
                 "controller": ElasticController(self.policy),
                 "replicas": [],
             }
             for _ in range(self.policy.min_replicas):
                 self._add_replica(name)
 
+    def _as_adapter(self, entry, default_cfg):
+        """Normalize a model-group entry to (adapter, spec, cfg).
+
+        Entries may be a ``WorkloadAdapter`` (bare or ``(adapter, cfg)``)
+        or the pre-WaveServe CapsNet form — a spec (None / RouterSpec),
+        bare or ``(spec, cfg)`` — which binds a ``CapsAdapter`` over the
+        fleet's params.  The spec slot of the group dict keeps the
+        historical value for CapsNet groups (adapter-backed groups carry
+        their spec, if any, on the adapter)."""
+        first, gcfg = (entry if isinstance(entry, tuple)
+                       else (entry, None))
+        gcfg = gcfg if gcfg is not None else default_cfg
+        if isinstance(first, wave_serve.WorkloadAdapter):
+            return first, getattr(first, "spec", None), gcfg
+        if self.caps_cfg is None:
+            raise ValueError(
+                "a (spec, cfg) model-group entry needs the fleet's "
+                "caps_cfg; pass a WorkloadAdapter instead for non-CapsNet "
+                "groups")
+        return (caps_serve.CapsAdapter(self.params, self.caps_cfg, first),
+                first, gcfg)
+
     # -- compile-once wave cache --------------------------------------------
 
-    def _cached_wave_fn(self, spec, cfg) -> Callable:
+    def _cached_wave_fn(self, adapter: wave_serve.WorkloadAdapter,
+                        cfg) -> Callable:
         """Fleet-wide compile-once: one jitted wave executable per
-        (spec, plan), shared by every replica — including those the
-        elastic controller adds later (scale-up never recompiles).
-        Unhashable plans (e.g. a list routing_plan) just skip the cache."""
-        try:
-            key = (spec, cfg)
-            hash(key)
-        except TypeError:
+        (adapter ``cache_key()``, plan), shared by every replica —
+        including those the elastic controller adds later (scale-up never
+        recompiles).  CapsNet adapters key on their spec, so the
+        historical ``(spec, cfg)`` cache entries still hit; NO_CACHE
+        adapters and unhashable plans (e.g. a list routing_plan) just
+        skip the cache."""
+        key = (adapter.cache_key(), cfg)
+        if adapter.cache_key() is wave_serve.NO_CACHE:
             key = None
+        else:
+            try:
+                hash(key)
+            except TypeError:
+                key = None
         if key is not None and key in self._wave_cache:
             return self._wave_cache[key]
-        fn = caps_serve.make_wave_fn(self.params, self.caps_cfg, spec, cfg)
+        fn = adapter.make_wave_fn(cfg)
         if key is not None:
             self._wave_cache[key] = fn
         return fn
@@ -343,8 +372,8 @@ class CapsFleet:
         rep = _Replica(
             name=name,
             model=model,
-            server=caps_serve.CapsServer(
-                self.params, self.caps_cfg, spec=g["spec"], cfg=g["cfg"],
+            server=wave_serve.WaveServer(
+                g["adapter"], cfg=g["cfg"],
                 clock=self.clock, wave_fn=wave_fn,
                 watchdog=StepWatchdog(window=32, clock=self.clock),
                 sleep=self._sleep),
@@ -464,31 +493,36 @@ class CapsFleet:
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, images, *, tenant: str = "default",
+    def submit(self, items, *, tenant: str = "default",
                model: str = "default",
                deadline_s: Optional[float] = None,
                priority: Optional[int] = None) -> List[str]:
         """Admit an arrival for ``tenant``; returns fleet-wide request ids
         ("<replica>:<rid>") for whatever was admitted.
 
-        Validate-then-mutate, atomically under the fleet lock: the images
-        are validated, the tenant's quota room and rate-bucket grant
-        computed, and only then do counters move.  Excess beyond the grant
-        is throttled (``overflow="shed"``, counted per tenant) or the
-        whole arrival is refused (``overflow="reject"`` raises
-        ``FleetAdmissionError``, nothing admitted).  The admitted slice
-        goes to the least-loaded non-draining replica of ``model``;
-        ``deadline_s``/``priority`` default to the tenant's policy
-        (``slo_s``/``priority``).
+        ``items`` is whatever the model group's adapter accepts (images
+        for CapsNet groups, prompt rows for LM, activation blocks for
+        MoE).  Validate-then-mutate, atomically under the fleet lock: the
+        arrival is validated by the group's adapter, the tenant's quota
+        room and rate-bucket grant computed, and only then do counters
+        move.  Excess beyond the grant is throttled (``overflow="shed"``,
+        counted per tenant) or the whole arrival is refused
+        (``overflow="reject"`` raises ``FleetAdmissionError``, nothing
+        admitted).  The admitted slice goes to the least-loaded
+        non-draining replica of ``model``; ``deadline_s``/``priority``
+        default to the tenant's policy (``slo_s``/``priority``).
         """
-        arr = caps_serve.validate_arrival(images, self._image_shape)
-        n = arr.shape[0]
+        # group resolution needs no lock: _groups keys are fixed at
+        # construction (only the replica lists mutate)
+        g = self._groups.get(model)
+        if g is None:
+            raise KeyError(f"unknown model group {model!r}; have "
+                           f"{sorted(self._groups)}")
+        arr = g["adapter"].validate(items)
+        n = len(arr)
         if n == 0:
             return []
         with self._lock:
-            if model not in self._groups:
-                raise KeyError(f"unknown model group {model!r}; have "
-                               f"{sorted(self._groups)}")
             pol = self._tenants.get(tenant)
             if pol is None:
                 if self.strict_tenants:

@@ -45,7 +45,7 @@ from typing import Callable, Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.runtime.caps_serve import ReplicaCrash
+from repro.runtime.wave_serve import ReplicaCrash
 
 FAULT_KINDS = ("error", "corrupt", "straggle", "crash")
 

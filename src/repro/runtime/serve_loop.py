@@ -1,21 +1,32 @@
-"""Batched serving loops.
+"""Batched serving loops and the LM/MoE workload adapters.
 
-Two workloads share this module:
+Three workloads share this module:
 
   * LM serving — prefill + greedy decode with continuous slots (the
-    prefill/decode_step pair the dry-run lowers at production shapes).
+    prefill/decode_step pair the dry-run lowers at production shapes),
+    plus ``LMDecodeAdapter``: greedy generation as a WaveServe workload
+    (DESIGN.md §WaveServe) so the full serving stack — bounded queues,
+    deadline waves, retries, NaN guard, fleet self-healing, chaos —
+    applies to LM requests unchanged.
+  * MoE serving — ``MoEAdapter``: fixed-shape ``moe_forward``
+    microbatches through the 'moe' Router algorithm
+    (``RouterSpec(algorithm="moe")`` via ``core.router.build_router``),
+    so expert-parallel plans flow through the same registry and psum
+    seams as capsule routing.
   * CapsNet classification serving — fixed-shape microbatched inference
     through the unified Router API (``core.router.build_router``), the
     paper's workload as a servable endpoint: requests are padded into a
     constant batch shape so the routed forward compiles exactly once per
-    (spec, plan).  The queue-fed continuous-batching form of this path —
-    waves of microbatches through the §4 host‖PIM pipeline — lives in
-    ``repro.runtime.caps_serve`` (DESIGN.md §Serving).
+    (spec, plan).  Since the WaveServe refactor this is a shim over the
+    CapsNet adapter core (DESIGN.md §Shims) — the queue-fed
+    continuous-batching form lives in ``repro.runtime.caps_serve``
+    (DESIGN.md §Serving).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Dict, List, Optional
 
 import jax
@@ -24,6 +35,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.layers import AxisRules, NO_RULES
+from repro.runtime import wave_serve
 
 
 @dataclasses.dataclass
@@ -38,9 +50,13 @@ class ServeStats:
 # lambdas per call (a fresh lambda is a fresh jit cache key — every request
 # would re-trace).  Keyed on everything the closures capture statically;
 # LRU-bounded so a server seeing many distinct prompt lengths doesn't pin
-# compiled executables forever.
+# compiled executables forever.  The lock makes get/insert/evict/reorder
+# atomic — ``serve_forever`` drives waves on server threads while clients
+# submit, so concurrent ``generate`` calls are the normal case, and an
+# unsynchronized OrderedDict corrupts under concurrent move_to_end/popitem.
 _LM_FNS: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
 _LM_FNS_MAX = 16
+_LM_FNS_LOCK = threading.Lock()
 
 
 def _rules_key(rules: AxisRules) -> tuple:
@@ -49,18 +65,20 @@ def _rules_key(rules: AxisRules) -> tuple:
 
 def _lm_fns(cfg: lm.ArchConfig, max_len: int, rules: AxisRules):
     key = (cfg, max_len, _rules_key(rules))
-    fns = _LM_FNS.get(key)
-    if fns is None:
-        prefill_fn = jax.jit(
-            lambda p, b: lm.prefill(p, cfg, b, max_len=max_len, rules=rules))
-        step_fn = jax.jit(
-            lambda p, s, t: lm.decode_step(p, cfg, s, t, rules))
-        _LM_FNS[key] = fns = (prefill_fn, step_fn)
-        while len(_LM_FNS) > _LM_FNS_MAX:
-            _LM_FNS.popitem(last=False)
-    else:
-        _LM_FNS.move_to_end(key)
-    return fns
+    with _LM_FNS_LOCK:
+        fns = _LM_FNS.get(key)
+        if fns is None:
+            prefill_fn = jax.jit(
+                lambda p, b: lm.prefill(p, cfg, b, max_len=max_len,
+                                        rules=rules))
+            step_fn = jax.jit(
+                lambda p, s, t: lm.decode_step(p, cfg, s, t, rules))
+            _LM_FNS[key] = fns = (prefill_fn, step_fn)
+            while len(_LM_FNS) > _LM_FNS_MAX:
+                _LM_FNS.popitem(last=False)
+        else:
+            _LM_FNS.move_to_end(key)
+        return fns
 
 
 def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
@@ -92,6 +110,160 @@ def generate(params, cfg: lm.ArchConfig, batch: Dict[str, jax.Array],
 
 
 # ---------------------------------------------------------------------------
+# LMDecodeAdapter — greedy LM generation as a WaveServe workload
+# ---------------------------------------------------------------------------
+
+class LMDecodeAdapter(wave_serve.WorkloadAdapter):
+    """One wave = one full greedy generation over a padded prompt batch
+    (DESIGN.md §WaveServe).
+
+    Payloads are ``(prompt_len,)`` int32 token rows; a wave packs up to
+    ``wave_lanes`` of them (zero-token rows pad the tail — LM batch lanes
+    are independent, so padding is bit-invariant by construction) and runs
+    ``generate`` over the hoisted ``_lm_fns`` prefill/step pair.  Keeping
+    a whole generation inside one wave keeps requests stateless between
+    waves, so the core's retry/evacuation machinery applies unchanged — a
+    failed wave simply re-generates (continuous per-step decode slots
+    would strand KV state on the dead replica).
+
+    Completions are ``(<=max_new_tokens,)`` int32 token arrays (shorter
+    when every lane hit ``eos_id`` early).  The wave output is float32 so
+    the NaN/Inf output guard — and the chaos corrupt fault — see an
+    ordinary float array; the guard's reference executable is simply a
+    fresh clean wave (greedy decode over jnp *is* the reference), so a
+    corrupted wave quarantines and still completes.
+    """
+
+    def __init__(self, params, cfg: lm.ArchConfig, *, prompt_len: int,
+                 max_new_tokens: int, rules: AxisRules = NO_RULES,
+                 eos_id: Optional[int] = None):
+        if prompt_len < 1 or max_new_tokens < 1:
+            raise ValueError("LMDecodeAdapter needs prompt_len >= 1 and "
+                             f"max_new_tokens >= 1; got {prompt_len}, "
+                             f"{max_new_tokens}")
+        self.params = params
+        self.cfg = cfg
+        self.prompt_len = prompt_len
+        self.max_new_tokens = max_new_tokens
+        self.rules = rules
+        self.eos_id = eos_id
+
+    def validate(self, items) -> np.ndarray:
+        return lm.validate_prompts(items, self.cfg, self.prompt_len)
+
+    def make_wave_fn(self, cfg: wave_serve.ServeConfig):
+        def wave(tokens):
+            out, _ = generate(self.params, self.cfg,
+                              {"tokens": jnp.asarray(tokens)},
+                              self.max_new_tokens, rules=self.rules,
+                              eos_id=self.eos_id)
+            return np.asarray(out, np.float32)
+        return wave
+
+    def make_reference_wave_fn(self, cfg: wave_serve.ServeConfig):
+        # greedy decode on the jnp stack IS the reference — a fresh,
+        # un-wrapped wave re-runs the same computation cleanly
+        return self.make_wave_fn(cfg)
+
+    def pack(self, payloads, cfg: wave_serve.ServeConfig) -> np.ndarray:
+        tokens = np.zeros((cfg.wave_lanes, self.prompt_len), np.int32)
+        for i, payload in enumerate(payloads):
+            tokens[i] = payload
+        return tokens
+
+    def unpack(self, out, n: int) -> List[np.ndarray]:
+        toks = np.asarray(out)
+        return [toks[i].astype(np.int32) for i in range(n)]
+
+    def cache_key(self):
+        # id(params): adapters own their params (a fleet may mix LM
+        # groups over different checkpoints), unlike CapsAdapter whose
+        # params are fleet-wide
+        return ("lm", self.cfg, self.prompt_len, self.max_new_tokens,
+                self.eos_id, _rules_key(self.rules), id(self.params))
+
+
+# ---------------------------------------------------------------------------
+# MoEAdapter — fixed-shape MoE microbatches via the 'moe' Router algorithm
+# ---------------------------------------------------------------------------
+
+class MoEAdapter(wave_serve.WorkloadAdapter):
+    """One wave = one fixed-shape MoE forward over padded token blocks
+    (DESIGN.md §WaveServe).
+
+    Payloads are ``(seq_len, d_model)`` float32 activation blocks; a wave
+    packs up to ``wave_lanes`` of them (zero blocks pad the tail), flattens
+    to ``(wave_lanes * seq_len, d_model)`` tokens and dispatches through
+    the 'moe' Router algorithm — ``RouterSpec(algorithm="moe")`` resolved
+    by ``core.router.build_router``, the same registry and psum seams as
+    capsule routing, so expert-parallel plans (axes ``(("E", axis),)``)
+    apply without a parallel code path.  Completions are the ``(seq_len,
+    d_model)`` output blocks.
+
+    Capacity note: expert capacity scales with the *total* token count
+    (``models.moe._capacity``), so padded lanes compete for expert slots
+    and strict padding bit-invariance needs a ``capacity_factor`` high
+    enough that nothing is dropped (``>= n_experts / top_k``); at lower
+    factors padding can only *drop more* tokens, never change routing
+    decisions of surviving ones.
+    """
+
+    def __init__(self, params, cfg, *, seq_len: int, plan=None):
+        if seq_len < 1:
+            raise ValueError(f"MoEAdapter needs seq_len >= 1; got {seq_len}")
+        self.params = params
+        self.cfg = cfg
+        self.seq_len = seq_len
+        self.plan = plan
+
+    def validate(self, items) -> np.ndarray:
+        shape = (self.seq_len, self.cfg.d_model)
+        try:
+            arr = np.asarray(items, np.float32)
+        except (ValueError, TypeError) as e:
+            raise ValueError(
+                "ragged arrival: could not assemble the activation blocks "
+                f"into one (n,) + {shape} float array") from e
+        if arr.ndim != 3 or arr.shape[1:] != shape:
+            got = arr.shape[1:] if arr.ndim == 3 else arr.shape
+            raise ValueError(f"activation block shape {got} != {shape}")
+        return arr
+
+    def make_wave_fn(self, cfg: wave_serve.ServeConfig):
+        from repro.core import router as router_lib
+        from repro.models import moe as moe_lib
+        spec = router_lib.RouterSpec(
+            algorithm="moe", options=(("moe_cfg", self.cfg),))
+        router = router_lib.build_router(spec, self.plan)
+        lanes, S, D = cfg.wave_lanes, self.seq_len, self.cfg.d_model
+
+        @jax.jit
+        def wave(x):
+            x2d = x.reshape(lanes * S, D)
+            y, _aux = router(x2d, *moe_lib.router_args(self.params))
+            return y.reshape(lanes, S, D)
+        return wave
+
+    def pack(self, payloads, cfg: wave_serve.ServeConfig) -> np.ndarray:
+        x = np.zeros((cfg.wave_lanes, self.seq_len, self.cfg.d_model),
+                     np.float32)
+        for i, payload in enumerate(payloads):
+            x[i] = payload
+        return x
+
+    def unpack(self, out, n: int) -> List[np.ndarray]:
+        y = np.asarray(out)
+        return [y[i] for i in range(n)]
+
+    def cache_key(self):
+        try:
+            hash(self.plan)
+        except TypeError:
+            return wave_serve.NO_CACHE
+        return ("moe", self.cfg, self.seq_len, self.plan, id(self.params))
+
+
+# ---------------------------------------------------------------------------
 # CapsNet classification serving (paper workload, Router API)
 # ---------------------------------------------------------------------------
 
@@ -112,35 +284,81 @@ def make_capsnet_classifier(params, caps_cfg, spec=None, plan=None,
 
     Returns (classify, stats): classify(images (N,H,W,C)) -> (N,) int32
     predicted classes; stats is updated in place per call.
+
+    Deprecation shim (DESIGN.md §Shims): the pad-to-batch path this
+    endpoint used to implement inline is now the CapsNet WaveServe
+    adapter's (``runtime.caps_serve.CapsAdapter``) — each chunk is one
+    queue-less wave with ``n_micro=1``, so the padding is the adapter's
+    mask-invariant lane padding (padded lanes can no longer perturb real
+    predictions) and there is exactly one pad-to-fixed-shape
+    implementation in the repo.  A prebuilt Router ``spec`` keeps the
+    legacy inline path — it carries its own ExecutionPlan, which the
+    wave recipe cannot represent.
     """
     from repro.core import router as router_lib
     from repro.models import capsnet
 
-    router = router_lib.as_router(
-        spec, plan, default_iterations=caps_cfg.routing_iters)
     stats = CapsServeStats()
 
-    @jax.jit
-    def _probs(p, images):
-        out = capsnet.forward(p, images, caps_cfg, router=router)
-        return out["class_probs"]
+    if (callable(spec) and not isinstance(spec, router_lib.RouterSpec)) \
+            or isinstance(plan, router_lib.ExecutionPlan):
+        # legacy inline path for prebuilt Routers (as_router also raises
+        # the historical "prebuilt Router" error when a plan is passed)
+        # and for full ExecutionPlans, which the wave recipe's
+        # routing_plan field (None / "auto" / axes) cannot represent
+        router = router_lib.as_router(
+            spec, plan, default_iterations=caps_cfg.routing_iters)
+
+        @jax.jit
+        def _probs(p, images):
+            out = capsnet.forward(p, images, caps_cfg, router=router)
+            return out["class_probs"]
+
+        def classify(images) -> jax.Array:
+            images = jnp.asarray(images)
+            n = images.shape[0]
+            preds: List[jax.Array] = []
+            for lo in range(0, n, max_batch):
+                chunk = images[lo:lo + max_batch]
+                pad = max_batch - chunk.shape[0]
+                if pad:
+                    chunk = jnp.concatenate(
+                        [chunk, jnp.zeros((pad,) + chunk.shape[1:],
+                                          chunk.dtype)])
+                    stats.padded_waste += pad
+                probs = _probs(params, chunk)
+                preds.append(jnp.argmax(probs, axis=-1)[:max_batch - pad])
+                stats.batches += 1
+            stats.requests += n
+            return (jnp.concatenate(preds) if preds
+                    else jnp.zeros((0,), jnp.int32))
+
+        return classify, stats
+
+    # adapter-core path: one queue-less wave per chunk.  class_probs is
+    # ‖v‖ — exactly the dynamic wave score — so argmax parity is exact.
+    from repro.runtime import caps_serve
+
+    if spec is None:
+        spec = router_lib.RouterSpec(iterations=caps_cfg.routing_iters)
+    adapter = caps_serve.CapsAdapter(params, caps_cfg, spec)
+    scfg = wave_serve.ServeConfig(microbatch=max_batch, n_micro=1,
+                                  pipeline=None, routing_plan=plan)
+    wave = adapter.make_wave_fn(scfg)
 
     def classify(images) -> jax.Array:
-        images = jnp.asarray(images)
-        n = images.shape[0]
-        preds: List[jax.Array] = []
+        arr = adapter.validate(images)
+        n = arr.shape[0]
+        preds: List[int] = []
         for lo in range(0, n, max_batch):
-            chunk = images[lo:lo + max_batch]
-            pad = max_batch - chunk.shape[0]
-            if pad:
-                chunk = jnp.concatenate(
-                    [chunk, jnp.zeros((pad,) + chunk.shape[1:],
-                                      chunk.dtype)])
-                stats.padded_waste += pad
-            probs = _probs(params, chunk)
-            preds.append(jnp.argmax(probs, axis=-1)[:max_batch - pad])
+            chunk = arr[lo:lo + max_batch]
+            take = chunk.shape[0]
+            out = wave(adapter.pack(list(chunk), scfg))
+            preds.extend(adapter.unpack(out, take))
             stats.batches += 1
+            stats.padded_waste += max_batch - take
         stats.requests += n
-        return jnp.concatenate(preds) if preds else jnp.zeros((0,), jnp.int32)
+        return (jnp.asarray(preds, jnp.int32) if preds
+                else jnp.zeros((0,), jnp.int32))
 
     return classify, stats
